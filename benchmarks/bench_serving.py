@@ -1,0 +1,62 @@
+"""Paper §VI-F (Fig. 9/10, Table VII): DSE under the three serving
+strategies on a GovReport-style long-context scenario, plus the
+homogeneous-vs-heterogeneous comparison (Fig. 10b)."""
+from .common import Timer, bo_budget, emit, ga_config
+
+
+def run():
+    from repro.core.compass import Scenario, co_explore, hardware_objective
+    from repro.core.traces import chunked_prefill_strategy, orca_strategy, \
+        vllm_strategy
+    from repro.configs import all_archs
+    from repro.core.bo import HardwarePoint
+    from repro.core.hardware import DATAFLOWS
+
+    spec = all_archs()["gpt3-7b"].llm_spec()
+    # GovReport-512T scaled down: 1 prefill (long input) + decode groups
+    mk = dict(prefill_len=4096, decode_ctx=600, decode_bs=32,
+              n_decode_batches=3)
+    iters, init = bo_budget()
+    results = {}
+    for name, strat in [("vllm", vllm_strategy), ("orca", orca_strategy),
+                        ("chunked_prefill", chunked_prefill_strategy)]:
+        wl = strat(**mk)
+        sc = Scenario(f"gov-{name}", spec, target_tops=512, phase="workload",
+                      workload=wl, n_blocks=1)
+        with Timer() as t:
+            res = co_explore(sc, bo_iters=iters, bo_init=init,
+                             ga_config=ga_config(), seed=0)
+        hw = res.hardware
+        ws = sum(1 for x in hw.layout if x == "WS")
+        print(f"# {name:16s} L={res.mapping.latency_s*1e3:9.2f}ms "
+              f"E={res.mapping.energy_j:8.3f}J MC=${res.mapping.mc_total:.1f} "
+              f"[{hw.spec_name} dram={hw.dram_bw_gbps} nop={hw.nop_bw_gbps} "
+              f"WS={ws} OS={hw.n_chiplets-ws}]")
+        results[name] = res
+        emit(f"serving_{name}", t.us,
+             f"edp={res.mapping.edp:.3e}")
+
+    # Fig. 10b: homogenise the chunked-prefill winner
+    best = results["chunked_prefill"]
+    sc = Scenario("gov-cp-fixed", spec, target_tops=512, phase="workload",
+                  workload=chunked_prefill_strategy(**mk), n_blocks=1)
+    edps = {}
+    for tag, layout in [("hetero", best.point.layout),
+                        ("all_WS", tuple([DATAFLOWS.index("WS")]
+                                         * len(best.point.layout))),
+                        ("all_OS", tuple([DATAFLOWS.index("OS")]
+                                         * len(best.point.layout)))]:
+        pt = HardwarePoint(best.point.spec_name, best.point.sys_idx, layout)
+        score, out = hardware_objective(sc, pt, ga_config(), "edp")
+        _ = score
+        edps[tag] = out.edp
+        print(f"# fig10b {tag:7s} EDP={out.edp:.4e}")
+    for tag in ("all_WS", "all_OS"):
+        print(f"# hetero EDP reduction vs {tag}: "
+              f"{100*(1 - edps['hetero']/edps[tag]):.1f}%")
+    emit("serving_homo_vs_hetero", 0,
+         f"hetero<=minhomo: {edps['hetero'] <= min(edps['all_WS'], edps['all_OS']) * 1.05}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Shared benchmark helpers. Budgets are reduced for the 1-core CPU CI
+environment; set COMPASS_FULL=1 for paper-scale searches (GA 120x100,
+BO 100 iterations)."""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+FULL = bool(int(os.environ.get("COMPASS_FULL", "0")))
+
+
+def ga_config():
+    from repro.core.ga import GAConfig
+
+    if FULL:
+        return GAConfig(population=120, generations=100)
+    return GAConfig(population=16, generations=6)
+
+
+def bo_budget():
+    return (100, 10) if FULL else (4, 4)  # (iters, init)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.0f},{derived}")

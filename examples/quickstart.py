@@ -1,0 +1,68 @@
+"""Quickstart: Compass mapping + hardware co-exploration on a small LLM
+serving scenario, with a Fig.-8-style spatio-temporal timeline of the found
+mapping.
+
+  PYTHONPATH=src python examples/quickstart.py [--timeline]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timeline", action="store_true")
+    ap.add_argument("--bo-iters", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.core.compass import Scenario, co_explore
+    from repro.core.evaluator import evaluate
+    from repro.core.ga import GAConfig
+    from repro.core.traces import SHAREGPT
+    from repro.core.workload import LLMSpec, build_execution_graph
+
+    spec = LLMSpec("demo-1b", d_model=2048, n_heads=16, n_kv_heads=16,
+                   head_dim=128, d_ff=8192, vocab=32000, n_layers=16)
+    sc = Scenario("sharegpt-decode-64T", spec, target_tops=64, phase="decode",
+                  trace=SHAREGPT, batch_size=16, n_batches=2, n_blocks=1,
+                  seed=args.seed)
+    print("co-exploring mapping x hardware (reduced budget)...")
+    res = co_explore(sc, bo_iters=args.bo_iters, bo_init=3,
+                     ga_config=GAConfig(population=16, generations=8),
+                     seed=args.seed)
+    hw = res.hardware
+    ws = sum(1 for x in hw.layout if x == "WS")
+    print(f"\nbest hardware: spec={hw.spec_name} grid={hw.grid} "
+          f"WS={ws} OS={hw.n_chiplets - ws} nop={hw.nop_bw_gbps}GB/s "
+          f"dram={hw.dram_bw_gbps}GB/s mb={hw.micro_batch_decode} "
+          f"tp={hw.tensor_parallel}")
+    print(f"latency={res.mapping.latency_s*1e3:.2f} ms  "
+          f"energy={res.mapping.energy_j:.3f} J  "
+          f"MC=${res.mapping.mc_total:.1f}  EDP={res.mapping.edp:.3e}")
+    print("BO best-so-far:", " -> ".join(f"{h:.2e}" for h in res.bo.history))
+
+    if args.timeline:
+        batch = sc.batches(hw)[0]
+        g = build_execution_graph(spec, batch, hw.micro_batch_decode,
+                                  tp=hw.tensor_parallel, n_blocks=1)
+        enc = res.mapping.encodings[(g.rows, g.n_cols)]
+        r = evaluate(g, enc, hw)
+        print("\nspatio-temporal execution (first block, ms):")
+        end = r.op_end_s / g.scale * 1e3
+        for c in range(hw.n_chiplets):
+            ops = [(end[b, l], g.layers[l].name, b)
+                   for b in range(g.rows) for l in range(g.n_cols)
+                   if enc.layer_to_chip[b, l] == c]
+            ops.sort()
+            lane = " ".join(f"{n}@r{b}:{t:.2f}" for t, n, b in ops[:6])
+            print(f"  chiplet {c} [{hw.layout[c]}]: {lane}"
+                  + (" ..." if len(ops) > 6 else ""))
+
+
+if __name__ == "__main__":
+    main()

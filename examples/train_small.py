@@ -1,0 +1,59 @@
+"""Train a ~100M-parameter model with the full production loop: microbatched
+grad accumulation, remat, async checkpointing, deterministic resume.
+
+  PYTHONPATH=src python examples/train_small.py --steps 200
+(reduce --steps for a quick smoke run; resume is automatic from --ckpt-dir)
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_small")
+    args = ap.parse_args()
+
+    from repro.models.transformer import ModelConfig
+    from repro.models import init_model, param_count
+    from repro.training import checkpoint as ckpt
+    from repro.training.data import DataConfig, TokenStream
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_loop import TrainConfig, train
+
+    cfg = ModelConfig(name="demo-100m", vocab=32_000, d_model=768,
+                      n_layers=12, n_heads=12, n_kv_heads=12, head_dim=64,
+                      d_ff=3072, max_seq=512)
+    import jax
+    n = param_count(init_model(jax.random.PRNGKey(0), cfg))
+    print(f"model: {n/1e6:.1f}M params")
+
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                    global_batch=args.global_batch)
+    tc = TrainConfig(microbatches=2, remat=True,
+                     opt=AdamWConfig(lr=3e-4, warmup_steps=20,
+                                     total_steps=args.steps))
+    stream = TokenStream(dc)
+    params = opt = None
+    start = 0
+    if latest := ckpt.latest_step(args.ckpt_dir):
+        from repro.training.train_loop import init_train_state
+        p0, o0 = init_train_state(jax.random.PRNGKey(0), cfg)
+        restored, extra = ckpt.restore(args.ckpt_dir, latest,
+                                       {"params": p0, "opt": o0})
+        params, opt = restored["params"], restored["opt"]
+        stream.restore(extra["data_step"])
+        start = latest
+        print(f"resuming from step {latest}")
+    train(cfg, tc, stream, steps=args.steps, ckpt_dir=args.ckpt_dir,
+          ckpt_every=25, params=params, opt_state=opt, start_step=start,
+          log_every=5)
+
+
+if __name__ == "__main__":
+    main()

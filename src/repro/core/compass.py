@@ -1,0 +1,227 @@
+"""Compass top-level co-exploration driver (paper §V, Eq. 1):
+
+    (H*, M*) = argmin_{H, M}  E_{lambda ~ D} [ C(lambda, H, M) ]
+
+The hardware sampling engine (BO) proposes hardware points; for each, the
+mapping generation engine (GA) searches the best mapping over batches
+sampled from the scenario's sequence-length trace; the evaluation engine
+scores each (workload, hardware, mapping) triplet. The best mapping's score
+is the hardware's fitness.
+
+Batches sharing an execution-graph structure (same rows x M) share one
+mapping — the mapping must serve the *distribution*, not a single batch
+(this is what Gemini's fixed-length assumption cannot do).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from .bo import BOResult, HardwarePoint, bo_search
+from .encoding import MappingEncoding
+from .evaluator import CostTables, EvalResult, evaluate
+from .ga import GAConfig, GAResult, ga_search
+from .hardware import HardwareConfig, monetary_cost
+from .traces import (
+    ServingWorkload,
+    TraceDistribution,
+    sample_batches,
+)
+from .workload import DECODE, PREFILL, LLMSpec, Request, build_execution_graph
+
+
+@dataclass
+class Scenario:
+    """A DSE scenario: model x trace x phase x compute target (§VI-A)."""
+
+    name: str
+    spec: LLMSpec
+    target_tops: float
+    phase: str = PREFILL                      # prefill | decode | workload
+    trace: TraceDistribution | None = None
+    batch_size: int = 4
+    n_batches: int = 3                        # sampled batches averaged over
+    workload: ServingWorkload | None = None   # explicit strategy workload (§VI-F)
+    n_blocks: int | None = None               # evaluated block window
+    seed: int = 0
+
+    def batches(self, hw: HardwareConfig) -> list[list[Request]]:
+        if self.workload is not None:
+            return self.workload.batches
+        assert self.trace is not None
+        return sample_batches(self.trace, self.phase, self.batch_size,
+                              self.n_batches, seed=self.seed)
+
+    def micro_batch(self, hw: HardwareConfig, batch: list[Request]) -> int:
+        if any(r.kind == DECODE for r in batch):
+            return hw.micro_batch_decode
+        return hw.micro_batch_prefill
+
+
+@dataclass
+class MappingSearchOutput:
+    encodings: dict[tuple, MappingEncoding]
+    latency_s: float
+    energy_j: float
+    mc_total: float
+    score: float
+    ga_results: list[GAResult] = field(default_factory=list)
+    per_batch: list[EvalResult] = field(default_factory=list)
+
+    @property
+    def edp(self) -> float:
+        return self.latency_s * self.energy_j
+
+
+def _objective_value(lat: float, en: float, mc: float, objective: str) -> float:
+    if objective == "edp":
+        return lat * en
+    if objective == "edp_mc":
+        return lat * en * mc
+    if objective == "latency":
+        return lat
+    if objective == "energy":
+        return en
+    raise ValueError(objective)
+
+
+def search_mapping(
+    spec: LLMSpec,
+    batches: Sequence[list[Request]],
+    hw: HardwareConfig,
+    micro_batches: Sequence[int],
+    ga_config: GAConfig | None = None,
+    objective: str = "edp",
+    n_blocks: int | None = None,
+    use_jax: bool | None = None,
+) -> MappingSearchOutput:
+    """GA mapping search shared across structurally-identical batches."""
+    ga_config = ga_config or GAConfig()
+    # group batches by execution-graph structure
+    groups: dict[tuple, list[int]] = {}
+    graphs, tables = [], []
+    for i, (batch, mb) in enumerate(zip(batches, micro_batches)):
+        g = build_execution_graph(spec, batch, mb, tp=hw.tensor_parallel,
+                                  n_blocks=n_blocks)
+        graphs.append(g)
+        tables.append(CostTables.build(g, hw))
+        key = (g.rows, g.n_cols)
+        groups.setdefault(key, []).append(i)
+
+    eval_batch_fn = _make_population_eval(graphs, tables, hw, use_jax)
+
+    encodings: dict[tuple, MappingEncoding] = {}
+    ga_results: list[GAResult] = []
+    per_batch: list[EvalResult | None] = [None] * len(graphs)
+    for key, idxs in groups.items():
+        rows, m_cols = key
+
+        def eval_fn(pop, idxs=idxs):
+            scores = np.zeros(len(pop))
+            for i in idxs:
+                res = eval_batch_fn(i, pop)
+                scores += np.array([
+                    _objective_value(r[0], r[1], 1.0, objective) for r in res
+                ])
+            return scores / len(idxs)
+
+        res = ga_search(eval_fn, rows, m_cols, hw.n_chiplets, ga_config)
+        encodings[key] = res.best
+        ga_results.append(res)
+        for i in idxs:
+            per_batch[i] = evaluate(graphs[i], res.best, hw, tables[i])
+
+    lat = float(sum(r.latency_s for r in per_batch))
+    en = float(sum(r.energy_j for r in per_batch))
+    mc = monetary_cost(hw)["mc_total"]
+    return MappingSearchOutput(
+        encodings=encodings, latency_s=lat, energy_j=en, mc_total=mc,
+        score=_objective_value(lat, en, mc, "edp_mc"),
+        ga_results=ga_results, per_batch=per_batch,
+    )
+
+
+def _make_population_eval(graphs, tables, hw, use_jax: bool | None):
+    """Returns eval(i, population) -> [(latency, energy)] for batch i.
+
+    Uses the JAX population evaluator when available (one jitted call per
+    generation); falls back to the numpy oracle.
+    """
+    if use_jax is None or use_jax:
+        try:
+            from .jax_evaluator import PopulationEvaluator
+
+            evals = [PopulationEvaluator(g, t, hw) for g, t in zip(graphs, tables)]
+
+            def eval_jax(i, pop):
+                lat, en = evals[i].evaluate_population(pop)
+                return list(zip(lat.tolist(), en.tolist()))
+
+            return eval_jax
+        except Exception:
+            if use_jax:
+                raise
+    def eval_np(i, pop):
+        out = []
+        for enc in pop:
+            r = evaluate(graphs[i], enc, hw, tables[i])
+            out.append((r.latency_s, r.energy_j))
+        return out
+
+    return eval_np
+
+
+@dataclass
+class CompassResult:
+    hardware: HardwareConfig
+    point: HardwarePoint
+    mapping: MappingSearchOutput
+    bo: BOResult
+
+
+def hardware_objective(
+    scenario: Scenario,
+    point: HardwarePoint,
+    ga_config: GAConfig | None = None,
+    objective: str = "edp_mc",
+    use_jax: bool | None = None,
+) -> tuple[float, MappingSearchOutput]:
+    hw = point.to_config(scenario.target_tops)
+    batches = scenario.batches(hw)
+    mbs = [scenario.micro_batch(hw, b) for b in batches]
+    out = search_mapping(scenario.spec, batches, hw, mbs, ga_config,
+                         objective="edp", n_blocks=scenario.n_blocks,
+                         use_jax=use_jax)
+    score = _objective_value(out.latency_s, out.energy_j, out.mc_total, objective)
+    return score, out
+
+
+def co_explore(
+    scenario: Scenario,
+    bo_iters: int = 12,
+    bo_init: int = 6,
+    ga_config: GAConfig | None = None,
+    objective: str = "edp_mc",
+    seed: int = 0,
+    use_jax: bool | None = None,
+) -> CompassResult:
+    """Full Compass loop: BO over hardware, GA over mappings (Eq. 1)."""
+    cache: dict[tuple, tuple[float, MappingSearchOutput]] = {}
+
+    def obj(point: HardwarePoint) -> float:
+        key = point.key()
+        if key not in cache:
+            cache[key] = hardware_objective(scenario, point, ga_config,
+                                            objective, use_jax)
+        return cache[key][0]
+
+    bo = bo_search(obj, scenario.target_tops, iters=bo_iters,
+                   init_points=bo_init, seed=seed)
+    best = bo.best_point
+    _, mapping = cache[best.key()]
+    return CompassResult(
+        hardware=best.to_config(scenario.target_tops),
+        point=best, mapping=mapping, bo=bo,
+    )

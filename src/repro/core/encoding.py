@@ -1,0 +1,120 @@
+"""Mapping encoding scheme (paper §IV).
+
+A mapping of an execution graph with ``rows`` micro-batches and ``M`` layer
+columns onto ``C`` chiplets is the triple:
+
+* ``micro_batch_size`` — carried by the workload/hardware level (changing it
+  re-fuses the graph, so the GA treats it as fixed; the BO engine searches it
+  as a ``z_sys`` parameter — paper §V-A);
+* ``segmentation`` — binary vector of length M-1; bit i = segment boundary
+  after column i;
+* ``layer_to_chip`` — (rows x M) integer matrix, entry = chiplet id.
+
+The *scheduling order* is Algorithm 2's loop nest: segments outermost (layer
+dim), micro-batches next, layers within the segment innermost. All-zeros
+segmentation => row-wise (layer-first); all-ones => column-wise
+(micro-batch-first); data/model/pipeline parallelism are the Algorithm-1
+special cases below.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class MappingEncoding:
+    segmentation: np.ndarray   # (M-1,) uint8
+    layer_to_chip: np.ndarray  # (rows, M) int32
+
+    def __post_init__(self):
+        self.segmentation = np.asarray(self.segmentation, dtype=np.uint8)
+        self.layer_to_chip = np.asarray(self.layer_to_chip, dtype=np.int32)
+        rows, m = self.layer_to_chip.shape
+        assert self.segmentation.shape == (max(m - 1, 0),), (
+            f"segmentation {self.segmentation.shape} vs M={m}")
+
+    @property
+    def rows(self) -> int:
+        return self.layer_to_chip.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.layer_to_chip.shape[1]
+
+    def validate(self, n_chiplets: int) -> bool:
+        return bool(
+            (self.layer_to_chip >= 0).all()
+            and (self.layer_to_chip < n_chiplets).all()
+            and np.isin(self.segmentation, (0, 1)).all()
+        )
+
+    def copy(self) -> "MappingEncoding":
+        return MappingEncoding(self.segmentation.copy(), self.layer_to_chip.copy())
+
+    def segments(self) -> list[tuple[int, int]]:
+        """Column intervals [lo, hi) induced by the segmentation bits."""
+        bounds = [0] + [i + 1 for i in range(len(self.segmentation))
+                        if self.segmentation[i]] + [self.n_cols]
+        return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)
+                if bounds[i] < bounds[i + 1]]
+
+    def scheduled_order(self) -> np.ndarray:
+        """Flat op order: (segment, micro_batch, layer-within-segment).
+
+        Returns an array of shape (rows * M, 2) of (row, col) pairs.
+        """
+        order = []
+        for lo, hi in self.segments():
+            for b in range(self.rows):
+                for l in range(lo, hi):
+                    order.append((b, l))
+        return np.asarray(order, dtype=np.int32)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 — common parallelism paradigms as encodings
+# --------------------------------------------------------------------------
+
+
+def data_parallel(rows: int, m_cols: int, n_chiplets: int) -> MappingEncoding:
+    """Each micro-batch row executes all layers on one chiplet."""
+    seg = np.zeros(max(m_cols - 1, 0), dtype=np.uint8)
+    l2c = np.zeros((rows, m_cols), dtype=np.int32)
+    for b in range(rows):
+        l2c[b, :] = b % n_chiplets
+    return MappingEncoding(seg, l2c)
+
+
+def model_parallel(rows: int, m_cols: int, n_chiplets: int) -> MappingEncoding:
+    """All rows fused conceptually; layers round-robin across chiplets.
+
+    (Paper's Algorithm 1 uses micro_batch_size = B so the graph has one row;
+    with more rows we replicate the same column->chip map on every row.)
+    """
+    seg = np.zeros(max(m_cols - 1, 0), dtype=np.uint8)
+    l2c = np.zeros((rows, m_cols), dtype=np.int32)
+    for l in range(m_cols):
+        l2c[:, l] = l % n_chiplets
+    return MappingEncoding(seg, l2c)
+
+
+def pipeline_parallel(rows: int, m_cols: int, n_chiplets: int) -> MappingEncoding:
+    """Fixed layer->chiplet assignment, segment boundary every C layers,
+    micro-batches stream through like a pipeline."""
+    seg = np.zeros(max(m_cols - 1, 0), dtype=np.uint8)
+    for i in range(m_cols - 1):
+        if (i + 1) % n_chiplets == 0:
+            seg[i] = 1
+    l2c = np.zeros((rows, m_cols), dtype=np.int32)
+    for l in range(m_cols):
+        l2c[:, l] = l % n_chiplets
+    return MappingEncoding(seg, l2c)
+
+
+def random_encoding(rng: np.random.Generator, rows: int, m_cols: int,
+                    n_chiplets: int, p_seg: float = 0.2) -> MappingEncoding:
+    seg = (rng.random(max(m_cols - 1, 0)) < p_seg).astype(np.uint8)
+    l2c = rng.integers(0, n_chiplets, size=(rows, m_cols), dtype=np.int32)
+    return MappingEncoding(seg, l2c)

@@ -1,0 +1,275 @@
+"""Mapping generation engine — genetic algorithm (paper §V-A).
+
+Explores ``segmentation`` and ``layer_to_chip`` for a fixed hardware config
+(``micro_batch_size`` / ``tensor_parallel`` belong to the hardware sampling
+engine because changing them re-fuses the graph).
+
+* Selection: tournament (fitness-rank within a random k-subset).
+* Crossover: bitwise on segmentation; subgraph-level on layer_to_chip (child
+  subgraphs determined by the child's segmentation, each inherited intact
+  from one parent).
+* Mutation: Table III operators 1-7 on layer_to_chip plus bit-flip/bit-swap
+  on segmentation, with probabilities annealed from graph-level-heavy
+  (exploration) to layer-level-heavy (fine-tuning) over generations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .encoding import MappingEncoding, pipeline_parallel, model_parallel, random_encoding
+
+
+@dataclass
+class GAConfig:
+    population: int = 64
+    generations: int = 40
+    tournament_k: int = 3
+    crossover_rate: float = 0.7
+    mutation_rate: float = 0.9
+    elite: int = 2
+    seed: int = 0
+
+
+@dataclass
+class GAResult:
+    best: MappingEncoding
+    best_score: float
+    history: list[float] = field(default_factory=list)
+    evaluations: int = 0
+
+
+# --- Table III mutation operators --------------------------------------------
+
+
+def _op1_replace_one(rng, enc: MappingEncoding, n_chips: int):
+    b = rng.integers(enc.rows)
+    l = rng.integers(enc.n_cols)
+    enc.layer_to_chip[b, l] = rng.integers(n_chips)
+
+
+def _op2_swap_adjacent_layer(rng, enc: MappingEncoding, n_chips: int):
+    if enc.n_cols < 2:
+        return
+    b = rng.integers(enc.rows)
+    l = rng.integers(enc.n_cols - 1)
+    lc = enc.layer_to_chip
+    lc[b, l], lc[b, l + 1] = lc[b, l + 1], lc[b, l]
+
+
+def _op3_swap_adjacent_batch(rng, enc: MappingEncoding, n_chips: int):
+    if enc.rows < 2:
+        return
+    b = rng.integers(enc.rows - 1)
+    l = rng.integers(enc.n_cols)
+    lc = enc.layer_to_chip
+    lc[b, l], lc[b + 1, l] = lc[b + 1, l], lc[b, l]
+
+
+def _pick_subgraph(rng, enc: MappingEncoding) -> tuple[int, int, int]:
+    segs = enc.segments()
+    lo, hi = segs[rng.integers(len(segs))]
+    return rng.integers(enc.rows), lo, hi
+
+
+def _op4_permute_subgraph(rng, enc: MappingEncoding, n_chips: int):
+    b, lo, hi = _pick_subgraph(rng, enc)
+    seg = enc.layer_to_chip[b, lo:hi]
+    enc.layer_to_chip[b, lo:hi] = rng.permutation(seg)
+
+
+def _op5_randomise_subgraph(rng, enc: MappingEncoding, n_chips: int):
+    b, lo, hi = _pick_subgraph(rng, enc)
+    enc.layer_to_chip[b, lo:hi] = rng.integers(n_chips, size=hi - lo)
+
+
+def _op6_swap_segment_columns(rng, enc: MappingEncoding, n_chips: int):
+    segs = enc.segments()
+    if len(segs) < 2:
+        return
+    i, j = rng.choice(len(segs), size=2, replace=False)
+    (lo1, hi1), (lo2, hi2) = segs[i], segs[j]
+    w = min(hi1 - lo1, hi2 - lo2)
+    lc = enc.layer_to_chip
+    tmp = lc[:, lo1:lo1 + w].copy()
+    lc[:, lo1:lo1 + w] = lc[:, lo2:lo2 + w]
+    lc[:, lo2:lo2 + w] = tmp
+
+
+def _op7_swap_batches(rng, enc: MappingEncoding, n_chips: int):
+    if enc.rows < 2:
+        return
+    i, j = rng.choice(enc.rows, size=2, replace=False)
+    lc = enc.layer_to_chip
+    tmp = lc[i].copy()
+    lc[i] = lc[j]
+    lc[j] = tmp
+
+
+_L2C_OPS = [_op1_replace_one, _op2_swap_adjacent_layer, _op3_swap_adjacent_batch,
+            _op4_permute_subgraph, _op5_randomise_subgraph,
+            _op6_swap_segment_columns, _op7_swap_batches]
+
+# impact class per operator: 0 = layer-level, 1 = subgraph-level, 2 = graph-level
+_OP_IMPACT = [0, 0, 0, 1, 1, 2, 2]
+
+
+def _seg_mutate(rng, enc: MappingEncoding):
+    if len(enc.segmentation) == 0:
+        return
+    if rng.random() < 0.5:  # bit-flip
+        i = rng.integers(len(enc.segmentation))
+        enc.segmentation[i] ^= 1
+    else:                   # bit-swap with a neighbour
+        if len(enc.segmentation) < 2:
+            return
+        i = rng.integers(len(enc.segmentation) - 1)
+        s = enc.segmentation
+        s[i], s[i + 1] = s[i + 1], s[i]
+
+
+def mutate(rng, enc: MappingEncoding, n_chips: int, progress: float):
+    """Phase-adaptive mutation: early generations favour graph-level
+    operators, late generations layer-level ones (paper §V-A)."""
+    # class weights interpolate exploration -> exploitation
+    w_layer = 0.2 + 0.6 * progress
+    w_sub = 0.3
+    w_graph = max(0.05, 0.5 - 0.5 * progress)
+    class_w = np.array([w_layer, w_sub, w_graph])
+    op_w = np.array([class_w[_OP_IMPACT[i]] for i in range(len(_L2C_OPS))])
+    op_w = op_w / op_w.sum()
+    op = rng.choice(len(_L2C_OPS), p=op_w)
+    _L2C_OPS[op](rng, enc, n_chips)
+    if rng.random() < 0.3:
+        _seg_mutate(rng, enc)
+
+
+def crossover(rng, a: MappingEncoding, b: MappingEncoding) -> MappingEncoding:
+    """Bitwise segmentation crossover + subgraph-level layer_to_chip
+    inheritance (paper §V-A)."""
+    if len(a.segmentation):
+        mask = rng.integers(0, 2, size=len(a.segmentation)).astype(bool)
+        seg = np.where(mask, a.segmentation, b.segmentation).astype(np.uint8)
+    else:
+        seg = a.segmentation.copy()
+    child = MappingEncoding(seg, a.layer_to_chip.copy())
+    for lo, hi in child.segments():
+        for row in range(child.rows):
+            src = a if rng.random() < 0.5 else b
+            child.layer_to_chip[row, lo:hi] = src.layer_to_chip[row, lo:hi]
+    return child
+
+
+def seed_population(rng, rows: int, m_cols: int, n_chips: int,
+                    size: int) -> list[MappingEncoding]:
+    """Initial population: the Algorithm-1 paradigms + random encodings."""
+    pop = [
+        pipeline_parallel(rows, m_cols, n_chips),
+        model_parallel(rows, m_cols, n_chips),
+    ]
+    while len(pop) < size:
+        pop.append(random_encoding(rng, rows, m_cols, n_chips))
+    return pop[:size]
+
+
+def ga_search(
+    eval_fn: Callable[[Sequence[MappingEncoding]], np.ndarray],
+    rows: int,
+    m_cols: int,
+    n_chips: int,
+    config: GAConfig | None = None,
+) -> GAResult:
+    """Minimise ``eval_fn`` (vectorised over a population) over the mapping
+    space. Lower score = better."""
+    cfg = config or GAConfig()
+    rng = np.random.default_rng(cfg.seed)
+    pop = seed_population(rng, rows, m_cols, n_chips, cfg.population)
+    scores = np.asarray(eval_fn(pop), dtype=float)
+    n_eval = len(pop)
+    history = [float(scores.min())]
+
+    for gen in range(cfg.generations):
+        progress = gen / max(cfg.generations - 1, 1)
+        order = np.argsort(scores)
+        elite = [pop[i].copy() for i in order[: cfg.elite]]
+
+        children: list[MappingEncoding] = []
+        while len(children) < cfg.population - cfg.elite:
+            # tournament selection
+            def tourney():
+                idx = rng.choice(len(pop), size=min(cfg.tournament_k, len(pop)),
+                                 replace=False)
+                return pop[idx[np.argmin(scores[idx])]]
+
+            p1, p2 = tourney(), tourney()
+            child = (crossover(rng, p1, p2) if rng.random() < cfg.crossover_rate
+                     else p1.copy())
+            if rng.random() < cfg.mutation_rate:
+                mutate(rng, child, n_chips, progress)
+            children.append(child)
+
+        pop = elite + children
+        scores = np.asarray(eval_fn(pop), dtype=float)
+        n_eval += len(pop)
+        history.append(float(scores.min()))
+
+    best_i = int(np.argmin(scores))
+    return GAResult(best=pop[best_i], best_score=float(scores[best_i]),
+                    history=history, evaluations=n_eval)
+
+
+def simulated_annealing_search(
+    eval_fn: Callable[[Sequence[MappingEncoding]], np.ndarray],
+    rows: int,
+    m_cols: int,
+    n_chips: int,
+    iters: int = 400,
+    seed: int = 0,
+    t0: float = 1.0,
+) -> GAResult:
+    """Gemini-style simulated-annealing mapping search (baseline, §VI-A)."""
+    rng = np.random.default_rng(seed)
+    cur = pipeline_parallel(rows, m_cols, n_chips)
+    cur_s = float(eval_fn([cur])[0])
+    best, best_s = cur.copy(), cur_s
+    history = [best_s]
+    for it in range(iters):
+        t = t0 * (1.0 - it / iters) + 1e-3
+        cand = cur.copy()
+        mutate(rng, cand, n_chips, progress=it / iters)
+        s = float(eval_fn([cand])[0])
+        if s < cur_s or rng.random() < np.exp(-(s - cur_s) / (t * max(cur_s, 1e-12))):
+            cur, cur_s = cand, s
+            if s < best_s:
+                best, best_s = cand.copy(), s
+        history.append(best_s)
+    return GAResult(best=best, best_score=best_s, history=history,
+                    evaluations=iters + 1)
+
+
+def random_search(
+    eval_fn: Callable[[Sequence[MappingEncoding]], np.ndarray],
+    rows: int,
+    m_cols: int,
+    n_chips: int,
+    budget: int = 400,
+    seed: int = 0,
+    batch: int = 64,
+) -> GAResult:
+    """Random mapping search with the same evaluation budget (ablation)."""
+    rng = np.random.default_rng(seed)
+    best, best_s = None, np.inf
+    done = 0
+    history = []
+    while done < budget:
+        n = min(batch, budget - done)
+        cand = [random_encoding(rng, rows, m_cols, n_chips) for _ in range(n)]
+        s = np.asarray(eval_fn(cand), dtype=float)
+        i = int(np.argmin(s))
+        if s[i] < best_s:
+            best, best_s = cand[i], float(s[i])
+        done += n
+        history.append(best_s)
+    return GAResult(best=best, best_score=best_s, history=history, evaluations=done)

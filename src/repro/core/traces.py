@@ -1,0 +1,150 @@
+"""Sequence-length traces and serving-strategy workload orchestration
+(paper §V intro, §VI-A "Scenario Setup", §VI-F).
+
+The *sequence length trace* is the novel DSE input of Compass: batches are
+sampled from a (input_len, output_len) distribution so the searched mapping /
+hardware is conditioned on the serving scenario rather than one fixed shape.
+
+Two built-in scenario families match the paper:
+* ShareGPT-like (dialogue): short inputs, long outputs (means 78 / 483);
+* GovReport-like (summarisation): long inputs, short outputs (9652 / 602).
+
+Both are modelled as clipped log-normals fitted to the published means (the
+real datasets are not shipped; the distribution object also accepts explicit
+sample lists, so real traces can be plugged in).
+
+Serving strategies (§VI-F, Fig. 9): vLLM-separated, Orca-mixed and
+Chunked-Prefill batch compositions over the same request stream.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from .workload import DECODE, PREFILL, Request, decode_request, prefill_request
+
+
+@dataclass
+class TraceDistribution:
+    """Log-normal (input, output) length distribution, clipped to bounds."""
+
+    name: str
+    mean_input: float
+    mean_output: float
+    sigma_input: float = 1.0
+    sigma_output: float = 1.0
+    min_len: int = 1
+    max_len: int = 161_281  # ShareGPT's observed max (paper §I)
+
+    def _sample_lognormal(self, rng, mean, sigma, n):
+        mu = math.log(mean) - sigma**2 / 2.0  # E[lognormal] = exp(mu + s^2/2)
+        x = rng.lognormal(mu, sigma, size=n)
+        return np.clip(np.round(x), self.min_len, self.max_len).astype(int)
+
+    def sample(self, rng: np.random.Generator, n: int) -> list[tuple[int, int]]:
+        ins = self._sample_lognormal(rng, self.mean_input, self.sigma_input, n)
+        outs = self._sample_lognormal(rng, self.mean_output, self.sigma_output, n)
+        return list(zip(ins.tolist(), outs.tolist()))
+
+
+SHAREGPT = TraceDistribution("sharegpt", mean_input=78, mean_output=483)
+GOVREPORT = TraceDistribution("govreport", mean_input=9652, mean_output=602,
+                              sigma_input=0.5, sigma_output=0.5)
+
+TRACES = {"sharegpt": SHAREGPT, "govreport": GOVREPORT}
+
+
+def prefill_batch(trace: TraceDistribution, rng, batch_size: int) -> list[Request]:
+    """A prefill-phase batch: every request processes its full input."""
+    return [prefill_request(i) for i, _ in trace.sample(rng, batch_size)]
+
+
+def decode_batch(trace: TraceDistribution, rng, batch_size: int) -> list[Request]:
+    """A decode-phase batch snapshot: context = input + progress * output."""
+    reqs = []
+    for i, o in trace.sample(rng, batch_size):
+        progress = rng.random()
+        reqs.append(decode_request(int(i + progress * o) + 1))
+    return reqs
+
+
+def fixed_length_batch(kind: str, length: int, batch_size: int) -> list[Request]:
+    """Gemini-style fixed/padded workload (baseline, §VI-A)."""
+    if kind == PREFILL:
+        return [prefill_request(length) for _ in range(batch_size)]
+    return [decode_request(length) for _ in range(batch_size)]
+
+
+def sample_batches(trace: TraceDistribution, phase: str, batch_size: int,
+                   n_batches: int, seed: int = 0) -> list[list[Request]]:
+    rng = np.random.default_rng(seed)
+    fn = prefill_batch if phase == PREFILL else decode_batch
+    return [fn(trace, rng, batch_size) for _ in range(n_batches)]
+
+
+# --------------------------------------------------------------------------
+# Serving strategies (paper §VI-F, Fig. 9)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ServingWorkload:
+    """A DSE workload = sequence of batches processed per scheduling round."""
+
+    name: str
+    batches: list[list[Request]]
+
+    def n_requests(self) -> int:
+        return sum(len(b) for b in self.batches)
+
+
+def vllm_strategy(prefill_len: int, decode_ctx: int, decode_bs: int,
+                  n_decode_batches: int) -> ServingWorkload:
+    """Separated: the prefill request forms a standalone batch; decode
+    batches run afterwards (vLLM pauses decodes for arriving prefills)."""
+    batches = [[prefill_request(prefill_len)]]
+    for i in range(n_decode_batches):
+        batches.append([decode_request(decode_ctx + i) for _ in range(decode_bs)])
+    return ServingWorkload("vllm", batches)
+
+
+def orca_strategy(prefill_len: int, decode_ctx: int, decode_bs: int,
+                  n_decode_batches: int) -> ServingWorkload:
+    """Mixed: the prefill request is co-batched with decode requests in the
+    first iteration (Orca's iteration-level scheduling)."""
+    first = [prefill_request(prefill_len)] + [
+        decode_request(decode_ctx) for _ in range(decode_bs)
+    ]
+    batches = [first]
+    for i in range(1, n_decode_batches):
+        batches.append([decode_request(decode_ctx + i) for _ in range(decode_bs)])
+    return ServingWorkload("orca", batches)
+
+
+def chunked_prefill_strategy(prefill_len: int, decode_ctx: int, decode_bs: int,
+                             n_decode_batches: int,
+                             chunk: int = 2048) -> ServingWorkload:
+    """Chunked Prefill: the prefill is split into chunks, each co-batched
+    with decode requests (Sarathi-Serve)."""
+    n_chunks = max(1, -(-prefill_len // chunk))
+    batches = []
+    consumed = 0
+    for ci in range(max(n_chunks, n_decode_batches)):
+        b: list[Request] = []
+        if ci < n_chunks:
+            this = min(chunk, prefill_len - consumed)
+            b.append(Request(PREFILL, this, consumed + this))
+            consumed += this
+        b.extend(decode_request(decode_ctx + ci) for _ in range(decode_bs))
+        batches.append(b)
+    return ServingWorkload("chunked_prefill", batches)
+
+
+STRATEGIES = {
+    "vllm": vllm_strategy,
+    "orca": orca_strategy,
+    "chunked_prefill": chunked_prefill_strategy,
+}

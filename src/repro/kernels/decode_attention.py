@@ -1,0 +1,118 @@
+"""GQA KV-cache decode attention (single new token per sequence).
+
+The decode hot loop is memory-bound: one query row per sequence attends over
+an S-long KV cache. Tiling: grid = (batch, kv_blocks) with the kv dimension
+innermost/sequential; all query heads of a sequence are processed together
+(the q block is [Hq, D], MXU-aligned in D), so each KV-cache block is read
+exactly once per sequence — the GQA head-group reuse the paper's WS-style
+residency exploits, expressed TPU-natively.
+
+Variable context lengths are handled with an explicit per-sequence length
+mask (no padding recompute). Validated against
+``ref.decode_attention_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, scale: float, block_s: int, rep: int):
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+    seq_len = len_ref[0]
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(si * block_s < seq_len)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)              # [Hq, D]
+        k = k_ref[0].astype(jnp.float32)              # [bs, Hkv, D]
+        v = v_ref[0].astype(jnp.float32)
+        hq, d = q.shape
+        bs, hkv, _ = k.shape
+        qg = q.reshape(hkv, rep, d)
+        # s[g, r, t] = <q[g, r], k[t, g]>
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale  # [hkv, rep, bs]
+        pos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        mask = pos < seq_len
+        s = jnp.where(mask, s, NEG_INF)
+        s = s.reshape(hq, bs)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(mask.reshape(hq, bs), jnp.exp(s - m_cur), 0.0)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        pg = p.reshape(hkv, rep, bs)
+        # acc[g, r, :] += p[g, r, :] @ v[:, g, :]
+        upd = jax.lax.dot_general(
+            pg, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)       # [hkv, rep, d]
+        acc_ref[...] = acc_ref[...] * alpha + upd.reshape(hq, d)
+        m_ref[...] = m_cur
+
+    @pl.when(si == ns - 1)
+    def _finalise():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_s", "interpret"))
+def decode_attention(
+    q: jax.Array,        # [B, Hq, D]
+    k_cache: jax.Array,  # [B, S, Hkv, D]
+    v_cache: jax.Array,  # [B, S, Hkv, D]
+    lengths: jax.Array,  # [B] int32
+    scale: float | None = None,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    assert hq % hkv == 0
+    rep = hq // hkv
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    block_s = min(block_s, max(s, 8))
+    s_pad = -(-s // block_s) * block_s
+    kp = jnp.pad(k_cache, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+
+    grid = (b, s_pad // block_s)
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_s=block_s, rep=rep)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, si: (bi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, hq, d), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, block_s, hkv, d), lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, block_s, hkv, d), lambda bi, si: (bi, si, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, d), lambda bi, si: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hq, d), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, kp, vp)

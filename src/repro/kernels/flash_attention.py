@@ -1,0 +1,134 @@
+"""Blocked causal/bidirectional GQA flash attention (prefill path).
+
+TPU-native tiling: grid = (batch*q_heads, q_blocks, kv_blocks) with the kv
+dimension innermost (sequential on TPU), online-softmax running state in VMEM
+scratch, MXU-aligned (128) q/kv blocks. GQA is expressed in the k/v
+BlockSpec index maps (q head -> kv head // group).
+
+Validated in interpret mode against ``ref.flash_attention_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  lq: int, lk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal offset: queries occupy the LAST lq positions of the lk context
+    offset = lk - lq
+    q_start = qi * block_q + offset
+    k_start = ki * block_k
+
+    # skip fully-masked kv blocks (k strictly after the last query position)
+    run = (k_start <= q_start + block_q - 1) if causal else True
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < lk  # padding guard
+        if causal:
+            mask &= kpos <= qpos
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # [bq, 1]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)                     # [bq, bk]
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(
+                            p, v_ref[0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finalise():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Lq, D]
+    k: jax.Array,  # [B, Hkv, Lk, D]
+    v: jax.Array,  # [B, Hkv, Lk, D]
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, lq, d = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    rep = hq // hkv
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+
+    block_q = min(block_q, max(lq, 8))
+    block_k = min(block_k, max(lk, 8))
+    lq_pad = -(-lq // block_q) * block_q
+    lk_pad = -(-lk // block_k) * block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, lq_pad - lq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, lk_pad - lk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, lk_pad - lk), (0, 0)))
+
+    qp = qp.reshape(b * hq, lq_pad, d)
+    kp = kp.reshape(b * hkv, lk_pad, d)
+    vp = vp.reshape(b * hkv, lk_pad, d)
+
+    grid = (b * hq, lq_pad // block_q, lk_pad // block_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, lq=lq, lk=lk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, ki, rep=rep: (bh // rep, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, ki, rep=rep: (bh // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, lq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out.reshape(b, hq, lq_pad, d)[:, :, :lq, :]

@@ -1,0 +1,45 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel body
+executes eagerly in Python, validating the exact TPU code path. On a real
+TPU backend they compile to Mosaic. ``use_interpret()`` picks automatically.
+"""
+from __future__ import annotations
+
+import jax
+
+from .decode_attention import decode_attention as _decode_attention
+from .flash_attention import flash_attention as _flash_attention
+from .mapping_eval import mapping_eval as _mapping_eval
+from .ssd_scan import ssd_scan as _ssd_scan
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, causal=True, scale=None, block_q=128,
+                    block_k=128, interpret=None):
+    return _flash_attention(
+        q, k, v, causal=causal, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=use_interpret() if interpret is None else interpret)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, scale=None, block_s=512,
+                     interpret=None):
+    return _decode_attention(
+        q, k_cache, v_cache, lengths, scale=scale, block_s=block_s,
+        interpret=use_interpret() if interpret is None else interpret)
+
+
+def ssd_scan(x, dt, a, b_mat, c_mat, chunk=128, interpret=None):
+    return _ssd_scan(
+        x, dt, a, b_mat, c_mat, chunk=chunk,
+        interpret=use_interpret() if interpret is None else interpret)
+
+
+def mapping_eval(t_proc, chip, row, col, pred_mask, rows, n_chips,
+                 interpret=None):
+    return _mapping_eval(
+        t_proc, chip, row, col, pred_mask, rows, n_chips,
+        interpret=use_interpret() if interpret is None else interpret)

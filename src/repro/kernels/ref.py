@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each reference is the straightforward O(n^2)/sequential implementation the
+kernels are validated against (tests sweep shapes/dtypes and
+``assert_allclose`` kernel vs oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_reference(
+    q: jax.Array,  # [B, Hq, Lq, D]
+    k: jax.Array,  # [B, Hkv, Lk, D]
+    v: jax.Array,  # [B, Hkv, Lk, D]
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        # queries occupy the LAST lq positions of the lk-long context
+        offset = k.shape[2] - lq
+        qi = jnp.arange(lq)[:, None] + offset
+        ki = jnp.arange(k.shape[2])[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def decode_attention_reference(
+    q: jax.Array,        # [B, Hq, D] — one new token per sequence
+    k_cache: jax.Array,  # [B, S, Hkv, D]
+    v_cache: jax.Array,  # [B, S, Hkv, D]
+    lengths: jax.Array,  # [B] int32 — valid context length per sequence
+    scale: float | None = None,
+) -> jax.Array:
+    b, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    kk = jnp.repeat(k_cache, rep, axis=2)  # [B, S, Hq, D]
+    vv = jnp.repeat(v_cache, rep, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", q, kk).astype(jnp.float32) * scale
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p.astype(vv.dtype), vv)
+
+
+def ssd_reference(
+    x: jax.Array,    # [B, L, H, P]
+    dt: jax.Array,   # [B, L, H]       (softplus-activated step size)
+    a: jax.Array,    # [H]             (negative decay rate, A = -exp(a_log))
+    b_mat: jax.Array,  # [B, L, N]
+    c_mat: jax.Array,  # [B, L, N]
+    init_state: jax.Array | None = None,  # [B, H, N, P]
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential state-space scan (Mamba-2 SSD semantics, one B/C group):
+
+        S_t = exp(a * dt_t) * S_{t-1} + dt_t * B_t^T (x_t)
+        y_t = C_t S_t
+    Returns (y [B, L, H, P], final_state [B, H, N, P]).
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, n, p), x.dtype)
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(a[None, :] * dtt)  # [B, H]
+        upd = jnp.einsum("bn,bhp->bhnp", bt, xt * dtt[..., None])
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b_mat, 1, 0), jnp.moveaxis(c_mat, 1, 0))
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def mapping_eval_reference(
+    t_proc: np.ndarray,    # [P, T] per-op processing time in scheduled order
+    chip: np.ndarray,      # [P, T] chiplet of each scheduled op
+    row: np.ndarray,       # [T]    graph row of each scheduled op
+    col: np.ndarray,       # [T]    graph col of each scheduled op
+    pred_mask: np.ndarray,  # [M, M] bool
+    rows: int,
+    n_chips: int,
+) -> np.ndarray:
+    """Sequential timing recurrence (evaluation-engine inner loop):
+    start = max(chip_free, max over predecessor end times). Returns the
+    makespan per population member."""
+    pop, t_len = t_proc.shape
+    m_cols = pred_mask.shape[0]
+    out = np.zeros(pop)
+    for pi in range(pop):
+        chip_free = np.zeros(n_chips)
+        end = np.zeros((rows, m_cols))
+        for t in range(t_len):
+            b, l, c = row[t], col[t], chip[pi, t]
+            pred_end = (end[b] * pred_mask[l]).max() if pred_mask[l].any() else 0.0
+            start = max(chip_free[c], pred_end)
+            fin = start + t_proc[pi, t]
+            end[b, l] = fin
+            chip_free[c] = fin
+        out[pi] = end.max()
+    return out

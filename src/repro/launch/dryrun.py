@@ -1,0 +1,362 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init). Do not move them. Everything below is normal code.
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape)
+# cell on the production mesh, prove it fits (memory_analysis), and extract
+# the roofline terms (cost_analysis + collective bytes from the partitioned
+# HLO). No arrays are allocated — inputs are ShapeDtypeStructs.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] --out results/dryrun
+
+import argparse
+import json
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, all_archs, ASSIGNED_ARCHS
+from ..configs.base import ArchConfig, Shape
+from ..dist.sharding import (
+    make_cache_shardings,
+    make_param_shardings,
+    token_sharding,
+    _fit,
+)
+from ..models.transformer import (
+    ModelConfig,
+    decode_step_scanned,
+    forward_scanned,
+    init_cache,
+    init_model,
+    prefill_scanned,
+)
+from ..training.optimizer import AdamWConfig, adamw_init
+from ..training.train_loop import TrainConfig, make_train_step
+from .mesh import make_production_mesh
+
+PARAM_DTYPE = jnp.bfloat16
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig):
+    from ..models.stacked import stack_params
+    return jax.eval_shape(
+        lambda k: stack_params(init_model(k, cfg, dtype=PARAM_DTYPE), cfg),
+        jax.random.PRNGKey(0))
+
+
+def abstract_opt(params):
+    return jax.eval_shape(adamw_init, params)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    from ..models.stacked import stack_cache
+    return jax.eval_shape(
+        lambda: stack_cache(init_cache(cfg, batch, max_len,
+                                       dtype=jnp.bfloat16), cfg))
+
+
+def input_specs(arch: ArchConfig, shape: Shape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = arch.model
+    specs: dict = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len + 1), jnp.int32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)
+        specs["cache"] = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    else:  # decode: one new token against a seq_len-deep cache
+        specs["token"] = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        specs["cache"] = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    if cfg.encoder_layers > 0:
+        specs["enc_out"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.encoder_len, cfg.d_model), PARAM_DTYPE)
+    if arch.modality_stub == "vision" and shape.kind == "train":
+        # precomputed patch embeddings enter via inputs_embeds
+        specs["inputs_embeds"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len, cfg.d_model), PARAM_DTYPE)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_step(arch: ArchConfig, shape: Shape, mesh, tcfg: TrainConfig | None = None):
+    """Returns (jitted fn, ordered abstract args) for this cell."""
+    cfg = arch.model
+    specs = input_specs(arch, shape)
+    params = abstract_params(cfg)
+    p_shard = make_param_shardings(mesh, params)
+    cache_shard = (make_cache_shardings(mesh, specs["cache"])
+                   if "cache" in specs else None)
+    tok_shard = token_sharding(mesh, shape.global_batch)
+    enc_shard = (NamedSharding(mesh, P(_fit(mesh, shape.global_batch,
+                                            ("pod", "data")), None, None))
+                 if "enc_out" in specs else None)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        from ..tuning import (grad_accum_dtype, train_compress,
+                              train_microbatches)
+        tcfg = tcfg or TrainConfig(microbatches=train_microbatches(),
+                                   remat=True,
+                                   compress_grads=train_compress(),
+                                   grad_accum_dtype=grad_accum_dtype())
+        opt = abstract_opt(params)
+        opt_shard = {"mu": p_shard, "nu": p_shard, "step": repl}
+        step = make_train_step(cfg, tcfg, mesh=mesh)
+        from ..training.train_loop import _constrain, masked_ce
+        from ..training.optimizer import adamw_update
+
+        if "inputs_embeds" in specs:
+            # VLM: swap token embedding for precomputed patch embeddings
+            def step(params, opt_state, embeds):  # noqa: F811
+                def loss(p):
+                    logits = forward_scanned(
+                        p, cfg, inputs_embeds=embeds, remat=tcfg.remat,
+                        mesh=mesh).astype(jnp.float32)
+                    return jnp.mean(jax.nn.logsumexp(logits, -1))
+                l, grads = jax.value_and_grad(loss)(params)
+                params, opt_state, stats = adamw_update(
+                    grads, opt_state, params, tcfg.opt)
+                return params, opt_state, dict(stats, loss=l)
+
+            args = (params, opt, specs["inputs_embeds"])
+            in_sh = (p_shard, opt_shard,
+                     NamedSharding(mesh, P(tok_shard.spec[0], None, None)))
+        elif "enc_out" in specs:
+            def step(params, opt_state, tokens, enc_out):
+                def loss(p):
+                    logits = forward_scanned(
+                        p, cfg, tokens[:, :-1], enc_out=enc_out,
+                        remat=tcfg.remat, mesh=mesh).astype(jnp.float32)
+                    return masked_ce(logits, tokens[:, 1:])
+                l, grads = jax.value_and_grad(loss)(params)
+                params, opt_state, stats = adamw_update(
+                    grads, opt_state, params, tcfg.opt)
+                return params, opt_state, dict(stats, loss=l)
+
+            args = (params, opt, specs["tokens"], specs["enc_out"])
+            in_sh = (p_shard, opt_shard, tok_shard, enc_shard)
+        else:
+            if tcfg.compress_grads:
+                residual = jax.tree.map(
+                    lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                    params)
+                args = (params, opt, specs["tokens"], residual)
+                in_sh = (p_shard, opt_shard, tok_shard, p_shard)
+            else:
+                args = (params, opt, specs["tokens"])
+                in_sh = (p_shard, opt_shard, tok_shard)
+        return jax.jit(step, in_shardings=in_sh), args
+
+    if shape.kind == "prefill":
+        def step(params, tokens, cache, enc_out=None):
+            return prefill_scanned(params, cfg, tokens, cache,
+                                   enc_out=enc_out, mesh=mesh)
+
+        args = [params, specs["tokens"], specs["cache"]]
+        in_sh = [p_shard, tok_shard, cache_shard]
+        if enc_shard is not None:
+            args.append(specs["enc_out"])
+            in_sh.append(enc_shard)
+        return jax.jit(step, in_shardings=tuple(in_sh)), tuple(args)
+
+    # decode / serve_step
+    def step(params, token, cache, enc_out=None):
+        return decode_step_scanned(params, cfg, token, cache,
+                                   enc_out=enc_out, mesh=mesh)
+
+    args = [params, specs["token"], specs["cache"]]
+    in_sh = [p_shard, NamedSharding(mesh, P(tok_shard.spec[0])), cache_shard]
+    if enc_shard is not None:
+        args.append(specs["enc_out"])
+        in_sh.append(enc_shard)
+    return jax.jit(step, in_shardings=tuple(in_sh)), tuple(args)
+
+
+# ---------------------------------------------------------------------------
+# collective accounting from the partitioned HLO
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\(?[^=]*?\)?)\s*(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device bytes moved by each collective kind (result shapes of the
+    SPMD-partitioned module; '-done' ops are skipped to avoid double count)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _LINE_RE.search(line)
+        if m:
+            out[m.group(2)] += _shape_bytes(m.group(1))
+    return out
+
+
+def collective_histogram(hlo_text: str) -> list[list]:
+    """[(kind, result_bytes, count)] — lets the roofline layer separate
+    per-layer (small, inside scanned bodies) from per-step (param-sized)
+    collectives."""
+    hist: dict[tuple, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _LINE_RE.search(line)
+        if m:
+            key = (m.group(2), _shape_bytes(m.group(1)))
+            hist[key] = hist.get(key, 0) + 1
+    return [[k, b, c] for (k, b), c in sorted(hist.items())]
+
+
+# ---------------------------------------------------------------------------
+# the dry run itself
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: ArchConfig, shape: Shape, multi_pod: bool = False,
+             verbose: bool = True) -> dict:
+    from ..tuning import train_microbatches
+    train_shape_mb = train_microbatches()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args = build_step(arch, shape, mesh)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    coll_hist = collective_histogram(hlo_text)
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec = {
+        "arch": arch.arch_id,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "n_chips": n_chips,
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": coll,
+        "collective_histogram": coll_hist,
+        "argument_bytes_per_device": int(mem.argument_size_in_bytes),
+        "output_bytes_per_device": int(mem.output_size_in_bytes),
+        "temp_bytes_per_device": int(mem.temp_size_in_bytes),
+        "code_bytes": int(mem.generated_code_size_in_bytes),
+        "microbatches": (train_shape_mb if shape.kind == "train" else 0),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    }
+    if verbose:
+        hbm = (rec["argument_bytes_per_device"]
+               + rec["temp_bytes_per_device"]) / 2**30
+        print(f"[dryrun] {arch.arch_id:>20s} x {shape.name:<12s} mesh "
+              f"{rec['mesh']:>8s}: OK  args+temp={hbm:.2f} GiB/dev  "
+              f"flops/dev={rec['flops_per_device']:.3e}  "
+              f"coll={sum(coll.values())/2**20:.1f} MiB/dev  "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return rec
+
+
+def cells_for(arch: ArchConfig) -> list[Shape]:
+    return arch.shapes()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = all_archs()
+    todo: list[tuple[ArchConfig, Shape, bool]] = []
+    arch_ids = ASSIGNED_ARCHS if (args.all or args.arch is None) \
+        else [args.arch]
+    for aid in arch_ids:
+        arch = archs[aid]
+        shapes = cells_for(arch) if args.shape is None \
+            else [SHAPES[args.shape]]
+        for sh in shapes:
+            if args.both_meshes:
+                todo.append((arch, sh, False))
+                todo.append((arch, sh, True))
+            else:
+                todo.append((arch, sh, args.multi_pod))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, sh, mp in todo:
+        tag = f"{arch.arch_id}__{sh.name}__{'pod2' if mp else 'pod1'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[dryrun] skip cached {tag}")
+            continue
+        try:
+            rec = run_cell(arch, sh, multi_pod=mp)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+        except Exception as e:  # a failure here is a bug in our sharding
+            failures.append((tag, repr(e)))
+            print(f"[dryrun] FAIL {tag}: {e!r}")
+    # skipped cells are recorded so the roofline table is complete
+    for aid in arch_ids:
+        arch = archs[aid]
+        for sh, why in arch.skipped_shapes():
+            tag = f"{arch.arch_id}__{sh.name}__skipped"
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump({"arch": arch.arch_id, "shape": sh.name,
+                           "skipped": why}, f, indent=1)
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

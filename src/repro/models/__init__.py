@@ -1,0 +1,10 @@
+from .transformer import (  # noqa: F401
+    ModelConfig,
+    MoECfg,
+    forward,
+    init_model,
+    init_cache,
+    prefill,
+    decode_step,
+    param_count,
+)

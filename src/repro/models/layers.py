@@ -1,0 +1,85 @@
+"""Primitive layers: dense, norms, RoPE, embeddings (pure JAX pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None):
+    if scale is None:
+        scale = 1.0 / np.sqrt(d_in)
+    # python-float scale keeps weak typing (a numpy scalar would silently
+    # promote bf16 params to f32)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), dtype) * float(scale))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["g"]).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"] + p["b"]).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"e": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p, tokens):
+    return jnp.take(p["e"], tokens, axis=0)
+
+
+def rope_freqs(head_dim: int, max_pos: int, theta: float = 10000.0):
+    """Precomputed RoPE cos/sin tables [max_pos, head_dim//2]."""
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    t = np.arange(max_pos)
+    ang = np.outer(t, inv)
+    return jnp.asarray(np.cos(ang), jnp.float32), jnp.asarray(np.sin(ang), jnp.float32)
+
+
+def apply_rope(x, positions, cos, sin):
+    """x: [..., L, D]; positions: [..., L] int32. Tables wider than D/2 are
+    sliced (e.g. MLA's rope_dim < head_dim shares the block's tables)."""
+    half = x.shape[-1] // 2
+    c = jnp.take(cos, positions, axis=0)[..., :half]  # [..., L, D/2]
+    s = jnp.take(sin, positions, axis=0)[..., :half]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    # interleaved-pair convention folded to half-split (equivalent rotation)
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)

@@ -1,0 +1,160 @@
+"""Mamba-2 mixer (SSD — state-space duality form).
+
+Projections + gating in plain JAX; the sequence mixing runs through one of:
+* ``impl="xla"`` — chunked SSD in pure jnp (differentiable; lax.scan carries
+  the inter-chunk state, identical math to the Pallas kernel);
+* ``impl="pallas"`` — ``kernels.ssd_scan`` (serving path).
+
+Decode keeps the recurrent state [H, N, P] in the cache and applies the
+single-step recurrence (no convolution stub at decode: the short causal conv
+of the reference implementation is replaced by an identity — noted in
+DESIGN.md; the SSD mixing itself is faithful).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+
+def init_mamba(key, cfg, dtype=jnp.float32):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.mamba_heads
+    ks = jax.random.split(key, 4)
+    return {
+        # fused projection: [z (gate), x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + h, False, dtype),
+        "out_proj": dense_init(ks[1], di, d, False, dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),       # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+    }
+
+
+def _split_proj(p, x, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
+    zxbcdt = dense(p["in_proj"], x)
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di:2 * di]
+    b_mat = zxbcdt[..., 2 * di:2 * di + n]
+    c_mat = zxbcdt[..., 2 * di + n:2 * di + 2 * n]
+    dt = jax.nn.softplus(
+        zxbcdt[..., 2 * di + 2 * n:].astype(jnp.float32) + p["dt_bias"])
+    return z, xs, b_mat, c_mat, dt
+
+
+def _ssd_xla(x, dt, a, b_mat, c_mat, init_state, chunk: int = 128):
+    """Chunked SSD, same math as kernels/ssd_scan.py, differentiable."""
+    bsz, l, h, pdim = x.shape
+    n = b_mat.shape[-1]
+    nc = -(-l // chunk)
+    pad = nc * chunk - l
+    xq = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(
+        bsz, nc, chunk, h, pdim)
+    dtq = jnp.pad(dt, ((0, 0), (0, pad), (0, 0))).reshape(bsz, nc, chunk, h)
+    bq = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0))).reshape(bsz, nc, chunk, n)
+    cq = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0))).reshape(bsz, nc, chunk, n)
+
+    ti = jnp.arange(chunk)[:, None]
+    ui = jnp.arange(chunk)[None, :]
+
+    def per_chunk(state, inp):
+        xc, dtc, bc, cc = inp  # [B,Q,H,P], [B,Q,H], [B,Q,N], [B,Q,N]
+        cum = jnp.cumsum(a[None, None, :] * dtc, axis=1)       # [B,Q,H]
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # [B,Q,Q,H]
+        decay = jnp.where((ui <= ti)[None, :, :, None], jnp.exp(seg), 0.0)
+        g = jnp.einsum("bqn,bun->bqu", cc, bc)                 # [B,Q,Q]
+        gd = g[..., None] * decay * dtc[:, None, :, :]         # [B,Q,U,H]
+        y_intra = jnp.einsum("bquh,buhp->bqhp", gd, xc)
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "bqn,bhnp->bqhp", cc, state)
+        w = dtc * jnp.exp(cum[:, -1:, :] - cum)                # [B,Q,H]
+        upd = jnp.einsum("bqn,bqhp->bhnp", bc, w[..., None] * xc)
+        state = jnp.exp(cum[:, -1, :])[:, :, None, None] * state + upd
+        return state, y_intra + y_inter
+
+    xs = (jnp.moveaxis(xq, 1, 0), jnp.moveaxis(dtq, 1, 0),
+          jnp.moveaxis(bq, 1, 0), jnp.moveaxis(cq, 1, 0))
+    final, ys = jax.lax.scan(per_chunk, init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * chunk, h, pdim)[:, :l]
+    return y, final
+
+
+def mamba_train(p, x, cfg, impl="xla"):
+    """Full-sequence SSD mixing. x: [B, L, d] -> [B, L, d]."""
+    bsz, l, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
+    pdim = di // h
+    z, xs, b_mat, c_mat, dt = _split_proj(p, x, cfg)
+    xh = xs.reshape(bsz, l, h, pdim)
+    a = -jnp.exp(p["a_log"])
+    if impl == "pallas":
+        y, _ = ops.ssd_scan(xh, dt, a, b_mat, c_mat)
+    else:
+        init = jnp.zeros((bsz, h, n, pdim), jnp.float32)
+        y, _ = _ssd_xla(xh, dt, a, b_mat, c_mat, init)
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return dense(p["out_proj"], y)
+
+
+def mamba_prefill(p, x, cfg, cache, impl="xla"):
+    """Prefill: mix the prompt and store the final recurrent state."""
+    bsz, l, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
+    pdim = di // h
+    z, xs, b_mat, c_mat, dt = _split_proj(p, x, cfg)
+    xh = xs.reshape(bsz, l, h, pdim)
+    a = -jnp.exp(p["a_log"])
+    if impl == "pallas":
+        y, state = ops.ssd_scan(xh, dt, a, b_mat, c_mat)
+    else:
+        init = jnp.zeros((bsz, h, n, pdim), jnp.float32)
+        y, state = _ssd_xla(xh, dt, a, b_mat, c_mat, init)
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    cache = {"state": state, "len": jnp.full((bsz,), l, jnp.int32)}
+    return dense(p["out_proj"], y), cache
+
+
+def mamba_extend(p, x, cfg, cache, impl="xla"):
+    """Multi-token extension from an existing recurrent state."""
+    bsz, l, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
+    pdim = di // h
+    z, xs, b_mat, c_mat, dt = _split_proj(p, x, cfg)
+    xh = xs.reshape(bsz, l, h, pdim)
+    a = -jnp.exp(p["a_log"])
+    y, state = _ssd_xla(xh, dt, a, b_mat, c_mat,
+                        cache["state"].astype(jnp.float32))
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    cache = {"state": state, "len": cache["len"] + l}
+    return dense(p["out_proj"], y), cache
+
+
+def mamba_decode(p, x, cfg, cache, impl="xla"):
+    """One-token recurrence. x: [B, 1, d]."""
+    bsz = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
+    pdim = di // h
+    z, xs, b_mat, c_mat, dt = _split_proj(p, x, cfg)
+    xh = xs.reshape(bsz, h, pdim)
+    a = -jnp.exp(p["a_log"])
+    dt1 = dt[:, 0, :]                                     # [B, H]
+    decay = jnp.exp(a[None, :] * dt1)
+    upd = jnp.einsum("bn,bhp->bhnp", b_mat[:, 0], xh * dt1[..., None])
+    state = cache["state"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_mat[:, 0], state)
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    cache = {"state": state, "len": cache["len"] + 1}
+    return dense(p["out_proj"], y), cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32):
+    h, n, pdim = cfg.mamba_heads, cfg.ssm_state, cfg.d_inner // cfg.mamba_heads
+    return {"state": jnp.zeros((batch, h, n, pdim), jnp.float32),
+            "len": jnp.zeros((batch,), jnp.int32)}

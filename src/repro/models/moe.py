@@ -1,0 +1,76 @@
+"""Mixture-of-Experts FFN (DeepSeek-style: shared + fine-grained routed).
+
+Routing is token-choice top-k with a capacity limit, executed as
+expert-choice gathers so every shape is static (TPU-friendly):
+
+1. router logits -> softmax -> per-token top-k mask;
+2. each expert takes its top-C tokens among those that selected it
+   (C = T * top_k / E * capacity_factor);
+3. gathered tokens run through the expert FFN (one batched einsum over the
+   expert dimension — shardable over the model axis = expert parallelism);
+4. results scatter-add back, weighted by the (renormalised) gate.
+
+Dropped tokens (over capacity) fall through to the shared experts/residual,
+matching standard capacity-factor semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, swiglu
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d, moe = cfg.d_model, cfg.moe
+    e, de = moe.n_routed, moe.d_expert
+    ks = jax.random.split(key, 6)
+    params = {
+        "router": dense_init(ks[0], d, e, False, dtype),
+        "wi": jax.random.normal(ks[1], (e, d, 2 * de), dtype) * float(d ** -0.5),
+        "wo": jax.random.normal(ks[2], (e, de, d), dtype) * float(de ** -0.5),
+    }
+    if moe.n_shared > 0:
+        ds = de * moe.n_shared
+        params["shared_wi"] = dense_init(ks[3], d, 2 * ds, False, dtype)
+        params["shared_wo"] = dense_init(ks[4], ds, d, False, dtype)
+    return params
+
+
+def apply_moe(p, x, cfg, capacity_factor: float | None = None):
+    """x: [B, L, d] -> [B, L, d]."""
+    if capacity_factor is None:
+        from ..tuning import moe_capacity_factor
+        capacity_factor = moe_capacity_factor()
+    b, l, d = x.shape
+    moe = cfg.moe
+    e, k = moe.n_routed, moe.top_k
+    xt = x.reshape(b * l, d)
+    t = xt.shape[0]
+
+    gates = jax.nn.softmax(dense(p["router"], xt).astype(jnp.float32))  # [T,E]
+    topv, _ = jax.lax.top_k(gates, k)
+    thresh = topv[:, -1:]
+    masked = jnp.where(gates >= thresh, gates, 0.0)          # top-k per token
+    denom = masked.sum(-1, keepdims=True)
+    masked = masked / jnp.where(denom == 0, 1.0, denom)
+
+    cap = max(1, min(t, int(t * k / e * capacity_factor) + 1))
+    # expert-choice among the token-choice winners
+    g_e, idx_e = jax.lax.top_k(masked.T, cap)                # [E, C]
+    xe = jnp.take(xt, idx_e.reshape(-1), axis=0).reshape(e, cap, d)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"])              # [E, C, 2*de]
+    gate_h, up_h = jnp.split(h, 2, axis=-1)
+    h = swiglu(gate_h, up_h)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])              # [E, C, d]
+    ye = ye * g_e[..., None].astype(ye.dtype)
+
+    y = jnp.zeros_like(xt).at[idx_e.reshape(-1)].add(
+        ye.reshape(e * cap, d), mode="drop")
+
+    if moe.n_shared > 0:
+        sh = dense(p["shared_wi"], xt)
+        sg, su = jnp.split(sh, 2, axis=-1)
+        y = y + dense(p["shared_wo"], swiglu(sg, su))
+    return y.reshape(b, l, d)

@@ -1,0 +1,68 @@
+"""Scan-over-layers execution (MaxText-style stacked blocks).
+
+Uniform (or period-p) layer stacks are rearranged so every pattern slot j
+holds one pytree whose leaves carry a leading [n_steps] dimension; the
+forward/prefill/decode loops become a single ``lax.scan`` over steps. This
+cuts HLO size and compile time by ~n_layers/p and bounds live temporaries to
+one layer's worth (on CPU lowering, per-layer bf16->f32 dot-operand converts
+would otherwise all be counted live — see EXPERIMENTS.md §Dry-run).
+
+Pattern period: lcm of the mixer interleave (attn_every) and the MoE
+interleave (moe_every); slot j's block structure repeats every p layers.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def layer_period(cfg) -> int:
+    p = 1
+    if cfg.mixer == "hybrid":
+        p = cfg.attn_every
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe_every)
+    return p
+
+
+def stack_blocks(blocks: list, period: int) -> list:
+    """blocks: n_layers per-layer trees -> period slot-trees with a leading
+    [n_steps] dim on every leaf."""
+    n = len(blocks)
+    assert n % period == 0, (n, period)
+    steps = n // period
+    slots = []
+    for j in range(period):
+        grp = [blocks[k * period + j] for k in range(steps)]
+        slots.append(jax.tree.map(lambda *xs: jnp.stack(xs), *grp))
+    return slots
+
+
+def unstack_blocks(slots: list, period: int) -> list:
+    steps = jax.tree.leaves(slots[0])[0].shape[0]
+    blocks = []
+    for k in range(steps):
+        for j in range(period):
+            blocks.append(jax.tree.map(lambda x: x[k], slots[j]))
+    return blocks
+
+
+def stack_params(params: dict, cfg) -> dict:
+    """Rearrange init_model output into the scanned layout."""
+    p = layer_period(cfg)
+    out = {k: v for k, v in params.items() if k not in ("blocks", "enc_blocks")}
+    out["blocks_stacked"] = stack_blocks(params["blocks"], p)
+    if "enc_blocks" in params:
+        out["enc_stacked"] = stack_blocks(params["enc_blocks"], 1)
+    return out
+
+
+def stack_cache(cache: list, cfg) -> list:
+    p = layer_period(cfg)
+    return stack_blocks(cache, p)
+
+
+def unstack_cache(slots: list, cfg) -> list:
+    return unstack_blocks(slots, layer_period(cfg))

@@ -1,0 +1,8 @@
+from .engine import ServingEngine, summarize  # noqa: F401
+from .scheduler import (  # noqa: F401
+    SCHEDULERS,
+    ChunkedPrefillScheduler,
+    OrcaScheduler,
+    ServeRequest,
+    VLLMScheduler,
+)

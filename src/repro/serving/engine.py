@@ -1,0 +1,148 @@
+"""Serving engine: slotted KV caches, jit'd chunked-prefill + batched decode
+steps, iteration-level scheduling (Orca-style continuous batching).
+
+The engine owns a [max_batch, max_len] cache; requests are admitted into
+slots, prefilled (whole-prompt or chunk-at-a-time, per the scheduler), then
+decoded together — one jit'd ``decode_step`` over all active slots per
+iteration, exactly the merged-QKV/FFN + split-attention execution pattern
+the DSE layer models.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.transformer import ModelConfig, decode_step, extend, init_cache
+from .scheduler import IterationPlan, Scheduler, ServeRequest
+
+
+@dataclass
+class IterationStats:
+    it: int
+    n_prefill_tokens: int
+    n_decode: int
+    seconds: float
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, max_batch: int = 8,
+                 max_len: int = 512, impl: str = "xla", enc_out=None,
+                 cache_dtype=jnp.float32, greedy: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.enc_out = enc_out
+        self.cache = init_cache(cfg, max_batch, max_len, dtype=cache_dtype)
+        self.free = list(range(max_batch))
+        self.impl = impl
+
+        def _decode(params, tokens, cache, active):
+            logits, cache = decode_step(params, cfg, tokens, cache,
+                                        enc_out=enc_out, impl=impl,
+                                        active=active)
+            return jnp.argmax(logits, -1), cache
+
+        self._decode = jax.jit(_decode)
+        self._extend = jax.jit(
+            partial(self._extend_impl),
+            static_argnames=("chunk_len",))
+
+    def _extend_impl(self, params, tokens, cache, slot, chunk_len):
+        """Run a chunk for one slot: gather row -> extend -> scatter back."""
+        row = jax.tree.map(
+            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, 0), cache)
+        logits, row = extend(self.params, self.cfg, tokens[None, :], row,
+                             enc_out=None if self.enc_out is None
+                             else self.enc_out[:1], impl=self.impl)
+
+        def put(c, r):
+            starts = (slot,) + (0,) * (c.ndim - 1)
+            return jax.lax.dynamic_update_slice(c, r.astype(c.dtype), starts)
+
+        cache = jax.tree.map(put, cache, row)
+        return jnp.argmax(logits, -1)[0], cache
+
+    def run(self, requests: list[ServeRequest], scheduler: Scheduler,
+            max_iters: int = 10_000):
+        waiting = list(requests)
+        running: list[ServeRequest] = []
+        finished: list[ServeRequest] = []
+        stats: list[IterationStats] = []
+        it = 0
+        while (waiting or running) and it < max_iters:
+            plan = scheduler.plan(waiting, running, len(self.free))
+            t0 = time.perf_counter()
+            n_prefill_tok = 0
+
+            for req, chunk_len in plan.prefill:
+                if req.slot is None:
+                    if not self.free:
+                        continue
+                    req.slot = self.free.pop()
+                    self._reset_slot(req.slot)
+                chunk = jnp.asarray(
+                    req.prompt[req.prefilled: req.prefilled + chunk_len],
+                    jnp.int32)
+                tok, self.cache = self._extend(
+                    self.params, chunk, self.cache, req.slot,
+                    chunk_len=int(chunk.shape[0]))
+                req.prefilled += int(chunk.shape[0])
+                n_prefill_tok += int(chunk.shape[0])
+                if req.prefill_done:
+                    req.generated.append(int(tok))
+                    req.first_token_iter = it
+                    waiting.remove(req)
+                    running.append(req)
+
+            if plan.decode:
+                toks = np.zeros((self.max_batch,), np.int32)
+                active = np.zeros((self.max_batch,), bool)
+                for r in plan.decode:
+                    toks[r.slot] = r.generated[-1]
+                    active[r.slot] = True
+                new_toks, self.cache = self._decode(
+                    self.params, jnp.asarray(toks), self.cache,
+                    jnp.asarray(active))
+                new_toks = np.asarray(new_toks)
+                for r in plan.decode:
+                    r.generated.append(int(new_toks[r.slot]))
+
+            for r in list(running):
+                if r.finished:
+                    r.done_iter = it
+                    running.remove(r)
+                    finished.append(r)
+                    self.free.append(r.slot)
+
+            stats.append(IterationStats(
+                it, n_prefill_tok, len(plan.decode),
+                time.perf_counter() - t0))
+            it += 1
+        return finished, stats
+
+    def _reset_slot(self, slot: int):
+        def zero(c):
+            return c.at[slot].set(jnp.zeros_like(c[slot]))
+
+        self.cache = jax.tree.map(zero, self.cache)
+
+
+def summarize(finished: list[ServeRequest], stats: list[IterationStats]):
+    total_s = sum(s.seconds for s in stats)
+    out_toks = sum(len(r.generated) for r in finished)
+    ttft = [r.first_token_iter - r.arrived_iter for r in finished
+            if r.first_token_iter is not None]
+    return {
+        "requests": len(finished),
+        "iterations": len(stats),
+        "output_tokens": out_toks,
+        "total_seconds": total_s,
+        "tokens_per_second": out_toks / total_s if total_s else 0.0,
+        "mean_ttft_iters": float(np.mean(ttft)) if ttft else 0.0,
+    }

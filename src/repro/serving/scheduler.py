@@ -1,0 +1,101 @@
+"""Iteration-level serving schedulers (paper §II, §VI-F, Fig. 9).
+
+All three SOTA batch-composition policies over one request queue:
+
+* ``VLLMScheduler``    — separated: an arriving prefill pauses decodes and
+                         runs as a standalone batch;
+* ``OrcaScheduler``    — mixed: arriving prefills are co-batched with the
+                         running decodes in the same iteration;
+* ``ChunkedPrefillScheduler`` — prefills are split into fixed-size chunks,
+                         each co-scheduled with the running decodes.
+
+The scheduler decides *composition*; the engine executes it. These are the
+same workload shapes the DSE layer's ``traces.STRATEGIES`` feed to Compass,
+so a searched design can be replayed against the real engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ServeRequest:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    generated: list[int] = field(default_factory=list)
+    prefilled: int = 0          # tokens of prompt already processed
+    slot: int | None = None     # engine cache slot once admitted
+    arrived_iter: int = 0
+    first_token_iter: int | None = None
+    done_iter: int | None = None
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefilled >= len(self.prompt)
+
+    @property
+    def finished(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclass
+class IterationPlan:
+    """What the engine should run this iteration."""
+    prefill: list[tuple[ServeRequest, int]]  # (request, chunk_len)
+    decode: list[ServeRequest]
+
+
+class Scheduler:
+    name = "base"
+
+    def plan(self, waiting: list[ServeRequest], running: list[ServeRequest],
+             free_slots: int) -> IterationPlan:
+        raise NotImplementedError
+
+
+class VLLMScheduler(Scheduler):
+    name = "vllm"
+
+    def plan(self, waiting, running, free_slots):
+        if waiting and free_slots > 0:
+            req = waiting[0]
+            return IterationPlan(
+                prefill=[(req, len(req.prompt) - req.prefilled)], decode=[])
+        return IterationPlan(prefill=[], decode=list(running))
+
+
+class OrcaScheduler(Scheduler):
+    name = "orca"
+
+    def plan(self, waiting, running, free_slots):
+        prefill = []
+        if waiting and free_slots > 0:
+            req = waiting[0]
+            prefill = [(req, len(req.prompt) - req.prefilled)]
+        return IterationPlan(prefill=prefill, decode=list(running))
+
+
+class ChunkedPrefillScheduler(Scheduler):
+    name = "chunked_prefill"
+
+    def __init__(self, chunk: int = 512):
+        self.chunk = chunk
+
+    def plan(self, waiting, running, free_slots):
+        prefill = []
+        # continue a partially-prefilled request first
+        partial = [r for r in waiting if 0 < r.prefilled < len(r.prompt)]
+        cand = partial[0] if partial else (
+            waiting[0] if waiting and free_slots > 0 else None)
+        if cand is not None:
+            remaining = len(cand.prompt) - cand.prefilled
+            prefill = [(cand, min(self.chunk, remaining))]
+        return IterationPlan(prefill=prefill, decode=list(running))
+
+
+SCHEDULERS = {
+    "vllm": VLLMScheduler,
+    "orca": OrcaScheduler,
+    "chunked_prefill": ChunkedPrefillScheduler,
+}

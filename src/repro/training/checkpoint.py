@@ -1,0 +1,132 @@
+"""Fault-tolerant checkpointing: flattened-pytree npz shards, atomic rename,
+optional async writer thread, resumable data-iterator state.
+
+Restart contract: ``latest_step(dir)`` -> ``restore(dir, step, like=...)``
+reproduces params, optimizer state, and the data counter exactly; a killed
+run resumes bit-identically (tested).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_key_str(k) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"[{k.idx}]"
+    return str(k)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None,
+         keep: int = 3):
+    """Atomic checkpoint write: tmp file + rename, then prune old steps."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}.npz")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    np.savez(tmp, **flat)
+    if extra is not None:
+        with open(tmp + ".json", "w") as f:
+            json.dump(extra, f)
+        os.replace(tmp + ".json", final + ".json")
+    os.replace(tmp, final)
+    _prune(ckpt_dir, keep)
+    return final
+
+
+_ASYNC_THREADS: list[threading.Thread] = []
+
+
+def save_async(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None,
+               keep: int = 3):
+    """Background checkpoint write (device->host copy happens here, on the
+    caller thread, so the snapshot is consistent; the disk IO overlaps the
+    next training steps)."""
+    flat = {k: np.array(v) for k, v in _flatten(tree).items()}
+
+    def _write():
+        os.makedirs(ckpt_dir, exist_ok=True)
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}.npz")
+        final = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+        np.savez(tmp, **flat)
+        if extra is not None:
+            with open(tmp + ".json", "w") as f:
+                json.dump(extra, f)
+            os.replace(tmp + ".json", final + ".json")
+        os.replace(tmp, final)
+        _prune(ckpt_dir, keep)
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    _ASYNC_THREADS.append(t)
+    return t
+
+
+def wait_pending():
+    for t in _ASYNC_THREADS:
+        t.join()
+    _ASYNC_THREADS.clear()
+
+
+def _prune(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        for suffix in ("", ".json"):
+            p = os.path.join(ckpt_dir, f"step_{s:08d}.npz{suffix}")
+            if os.path.exists(p):
+                os.remove(p)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)\.npz", name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any,
+            shardings: Any = None) -> tuple[Any, dict]:
+    """Restore a pytree saved with ``save``; ``like`` supplies the structure.
+    ``shardings`` (same structure) places leaves directly onto the mesh."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    flat_shard = (jax.tree.leaves(shardings) if shardings is not None
+                  else [None] * len(paths))
+    for (path_k, leaf), sh in zip(paths, flat_shard):
+        key = "/".join(_key_str(k) for k in path_k)
+        arr = data[key]
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        leaves.append(arr)
+    extra = {}
+    if os.path.exists(path + ".json"):
+        with open(path + ".json") as f:
+            extra = json.load(f)
+    return jax.tree.unflatten(treedef, leaves), extra

@@ -1,0 +1,156 @@
+"""Training loop: next-token CE, microbatched gradient accumulation
+(lax.scan — the per-microbatch psum is folded into the accumulation so
+gradient communication overlaps backward compute), remat policy per block,
+optional error-feedback gradient compression, checkpoint/restart.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.compression import roundtrip
+from ..models.transformer import ModelConfig, forward
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat: bool = True
+    compress_grads: bool = False
+    grad_accum_dtype: str = "float32"   # float32 | bfloat16
+    opt: AdamWConfig = AdamWConfig()
+
+
+def _constrain(x, spec_axes, mesh):
+    """Sharding constraint against an explicit mesh (no-op without one);
+    axes absent from the mesh are dropped per-dim."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def fit(ax, dim):
+        names = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        names = tuple(n for n in names if n in mesh.axis_names)
+        if not names:
+            return None
+        import numpy as _np
+        size = int(_np.prod([mesh.shape[n] for n in names]))
+        if dim % size:
+            return None
+        return names if len(names) > 1 else names[0]
+
+    spec = P(*[fit(a, d) for a, d in zip(spec_axes, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def masked_ce(logits, tgt):
+    """Vocab-shardable cross-entropy: the gold logit is extracted with a
+    masked sum instead of take_along_axis — a gather over the TP-sharded
+    vocab axis would force an all-gather of the full logits (Megatron-style
+    vocab-parallel CE)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == tgt[..., None], logits, 0.0), -1)
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, remat: bool = True, mesh=None):
+    """tokens: [B, L+1] int32 -> scalar mean CE. The logits stay
+    batch x vocab sharded (never replicated — 150k-vocab logits at 4k
+    sequence would otherwise dominate HBM)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    if isinstance(params, dict) and "blocks_stacked" in params:
+        from ..models.transformer import forward_scanned as _fwd
+    else:
+        _fwd = forward
+    logits = _fwd(params, cfg, inp, remat=remat, mesh=mesh)
+    logits = _constrain(logits.astype(jnp.float32),
+                        (("pod", "data"), None, "model"), mesh)
+    return masked_ce(logits, tgt)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+    """Returns train_step(params, opt_state, tokens[, residual]) — jit it
+    with in_shardings from dist.sharding for the production mesh."""
+
+    def train_step(params, opt_state, tokens, residual=None):
+        if tcfg.microbatches > 1:
+            b = tokens.shape[0]
+            mb = tcfg.microbatches
+            tok_mb = tokens.reshape(mb, b // mb, tokens.shape[1])
+
+            acc_dt = jnp.dtype(tcfg.grad_accum_dtype)
+
+            def acc_step(grads, tok):
+                l, g = jax.value_and_grad(loss_fn)(params, cfg, tok,
+                                                   remat=tcfg.remat,
+                                                   mesh=mesh)
+                grads = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), grads, g)
+                return grads, l
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            grads, losses = jax.lax.scan(acc_step, zero, tok_mb)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, cfg, tokens,
+                                                      remat=tcfg.remat,
+                                                      mesh=mesh)
+        if tcfg.compress_grads:
+            grads, residual = roundtrip(grads, residual)
+        params, opt_state, stats = adamw_update(grads, opt_state, params,
+                                                tcfg.opt)
+        stats = dict(stats, loss=loss)
+        if tcfg.compress_grads:
+            return params, opt_state, stats, residual
+        return params, opt_state, stats
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, dtype=jnp.float32):
+    from ..models.transformer import init_model
+
+    params = init_model(key, cfg, dtype)
+    return params, adamw_init(params)
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig, data_iter, steps: int,
+          ckpt_dir: str | None = None, ckpt_every: int = 50,
+          params=None, opt_state=None, start_step: int = 0,
+          log_every: int = 10, seed: int = 0):
+    """Single-host driver with checkpoint/restart (the multi-pod launcher in
+    launch/train.py wraps the same step in pjit)."""
+    from . import checkpoint as ckpt
+
+    if params is None:
+        params, opt_state = init_train_state(jax.random.PRNGKey(seed), cfg)
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    logs = []
+    for step in range(start_step, steps):
+        tokens = jnp.asarray(next(data_iter))
+        t0 = time.perf_counter()
+        params, opt_state, stats = step_fn(params, opt_state, tokens)
+        stats = jax.device_get(stats)
+        dt = time.perf_counter() - t0
+        logs.append({"step": step, "loss": float(stats["loss"]),
+                     "lr": float(stats["lr"]), "sec": dt})
+        if log_every and step % log_every == 0:
+            print(f"step {step:5d} loss {stats['loss']:.4f} "
+                  f"lr {stats['lr']:.2e} ({dt:.2f}s)")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            ckpt.save_async(ckpt_dir, step + 1,
+                            {"params": params, "opt": opt_state},
+                            extra={"data_step": data_iter.state()})
+    if ckpt_dir:
+        ckpt.wait_pending()
+    return params, opt_state, logs

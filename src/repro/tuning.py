@@ -1,0 +1,48 @@
+"""Perf-iteration knobs (EXPERIMENTS.md §Perf).
+
+Environment-driven so a dry-run cell can be re-lowered under a variant
+without code edits; every knob's default is the shipped baseline.
+
+REPRO_CACHE_SHARD   = seq | feature   (attention-cache sharding fallback
+                      when KV heads don't divide the model axis: sequence-
+                      parallel vs feature-dim sharding)
+REPRO_CACHE_UPDATE  = blend | scatter (decode cache update: one-hot blend —
+                      shardable across a sequence-sharded cache but 2R+1W of
+                      the whole cache — vs positional scatter — 1W, requires
+                      the sequence dim to be local)
+REPRO_TRAIN_COMPRESS= 0 | 1           (error-feedback int8 gradient
+                      compression around the step-level all-reduce)
+"""
+from __future__ import annotations
+
+import os
+
+
+def cache_shard_mode() -> str:
+    return os.environ.get("REPRO_CACHE_SHARD", "seq")
+
+
+def cache_update_mode() -> str:
+    return os.environ.get("REPRO_CACHE_UPDATE", "blend")
+
+
+def train_compress() -> bool:
+    return os.environ.get("REPRO_TRAIN_COMPRESS", "0") == "1"
+
+
+def cache_quant() -> bool:
+    """int8 KV/latent cache with per-(token, head) scales
+    (REPRO_CACHE_QUANT=1) — beyond-paper serving optimisation."""
+    return os.environ.get("REPRO_CACHE_QUANT", "0") == "1"
+
+
+def grad_accum_dtype() -> str:
+    return os.environ.get("REPRO_GRAD_ACCUM", "float32")
+
+
+def train_microbatches() -> int:
+    return int(os.environ.get("REPRO_TRAIN_MICROBATCH", "8"))
+
+
+def moe_capacity_factor() -> float:
+    return float(os.environ.get("REPRO_MOE_CAP", "1.25"))

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# keep smoke tests on 1 device — only the dry-run uses 512 fake devices
+os.environ.pop("XLA_FLAGS", None)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,55 @@
+"""End-to-end Compass co-exploration + baselines (reduced budgets)."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import gemini_style_search, scar_style_mapping
+from repro.core.compass import Scenario, co_explore, hardware_objective
+from repro.core.evaluator import CostTables, evaluate
+from repro.core.encoding import pipeline_parallel
+from repro.core.ga import GAConfig
+from repro.core.bo import random_point
+from repro.core.hardware import make_hardware
+from repro.core.traces import SHAREGPT
+from repro.core.workload import LLMSpec, build_execution_graph, prefill_request
+
+SPEC = LLMSpec("tiny", 512, 8, 8, 64, 2048, 32000, 8)
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    return Scenario("t", SPEC, target_tops=64, phase="prefill",
+                    trace=SHAREGPT, batch_size=4, n_batches=2, n_blocks=2)
+
+
+def test_co_explore_end_to_end(scenario):
+    res = co_explore(scenario, bo_iters=2, bo_init=2,
+                     ga_config=GAConfig(population=8, generations=3), seed=0)
+    assert res.mapping.latency_s > 0 and res.mapping.energy_j > 0
+    assert res.bo.history[-1] <= res.bo.history[0]
+    assert res.hardware.n_chiplets >= 1
+
+
+def test_hardware_objective_cached_consistency(scenario):
+    rng = np.random.default_rng(0)
+    p = random_point(rng, 64)
+    s1, out1 = hardware_objective(scenario, p,
+                                  GAConfig(population=8, generations=2))
+    assert s1 == pytest.approx(out1.latency_s * out1.energy_j * out1.mc_total)
+
+
+def test_gemini_baseline_runs(scenario):
+    res = gemini_style_search(scenario, sa_iters=10, grid_subsample=4)
+    assert res.latency_s > 0 and res.mc_total > 0
+    # homogeneous layout by construction
+    assert len(set(res.hardware.layout)) == 1
+
+
+def test_scar_mapping_beats_naive_pipeline_or_close():
+    hw = make_hardware(256, "M", tensor_parallel=2)
+    hw = hw.replace(layout=tuple(["WS", "OS"] * (hw.n_chiplets // 2)))
+    batch = [prefill_request(64 * (i + 1)) for i in range(4)]
+    g = build_execution_graph(SPEC, batch, 2, tp=2, n_blocks=1)
+    t = CostTables.build(g, hw)
+    scar = evaluate(g, scar_style_mapping(g, hw, t), hw, t)
+    pp = evaluate(g, pipeline_parallel(g.rows, g.n_cols, hw.n_chiplets), hw, t)
+    assert scar.latency_s <= pp.latency_s * 1.5

@@ -1,0 +1,52 @@
+"""ZigZag-lite intra-chiplet cost model — invariants + calibration."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import gemm_cost, vector_cost
+from repro.core.hardware import BYTES_PER_ELEM, CHIPLET_LIBRARY
+
+SPEC = CHIPLET_LIBRARY["L"]
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=st.integers(1, 20000), k=st.integers(1, 8192), n=st.integers(1, 16384),
+       flow=st.sampled_from(["WS", "OS"]))
+def test_traffic_lower_bounds(m, k, n, flow):
+    c = gemm_cost(m, k, n, SPEC, flow)
+    # every operand must move at least once
+    assert c.weight_bytes >= k * n * BYTES_PER_ELEM - 1e-6
+    assert c.input_bytes >= m * k * BYTES_PER_ELEM - 1e-6
+    assert c.output_bytes >= m * n * BYTES_PER_ELEM - 1e-6
+    # compute cycles at least ideal MACs/array
+    assert c.compute_cycles >= m * k * n / SPEC.macs - 1e-6
+    assert c.mac_energy_pj > 0
+
+
+def test_ws_resident_flag():
+    small = gemm_cost(128, 512, 512, SPEC, "WS")
+    big = gemm_cost(128, 8192, 8192, SPEC, "WS")
+    assert small.ws_resident_ok
+    assert not big.ws_resident_ok  # 64M elems >> resident budget
+
+
+def test_os_wins_large_m_merged_gemm():
+    """Long-sequence merged GEMMs prefer OS (weight-rotation penalty on WS)."""
+    m, k, n = 40960, 4096, 12288
+    ws = gemm_cost(m, k, n, SPEC, "WS")
+    os_ = gemm_cost(m, k, n, SPEC, "OS")
+    tot = lambda c: c.weight_bytes + c.input_bytes + c.output_bytes
+    assert tot(os_) < tot(ws)
+
+
+def test_ws_weight_once_small_m():
+    """At small M both read weights once; WS is then eligible for
+    cross-micro-batch residency (the serving-level advantage)."""
+    m, k, n = 128, 4096, 2048
+    ws = gemm_cost(m, k, n, SPEC, "WS")
+    assert ws.weight_bytes == pytest.approx(k * n * BYTES_PER_ELEM)
+    assert ws.ws_resident_ok
+
+
+def test_vector_cost():
+    c = vector_cost(1e6, SPEC)
+    assert c.compute_cycles > 0 and c.weight_bytes == 0

@@ -1,0 +1,38 @@
+"""Deliverable (e): one real dry-run cell end-to-end in a subprocess
+(512 forced host devices, both meshes), plus roofline analysis of the
+artifact."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.parametrize("mesh_flag", [[], ["--multi-pod"]])
+def test_dryrun_whisper_decode(mesh_flag):
+    with tempfile.TemporaryDirectory() as d:
+        env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+        env.pop("XLA_FLAGS", None)
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "whisper-tiny", "--shape", "decode_32k",
+             "--out", d] + mesh_flag,
+            env=env, cwd=ROOT, capture_output=True, text=True, timeout=560)
+        assert out.returncode == 0, out.stderr[-2000:]
+        tag = "pod2" if mesh_flag else "pod1"
+        path = os.path.join(d, f"whisper-tiny__decode_32k__{tag}.json")
+        assert os.path.exists(path)
+        rec = json.load(open(path))
+        assert rec["n_chips"] == (512 if mesh_flag else 256)
+        assert rec["flops_per_device"] > 0
+        assert rec["collective_histogram"] is not None
+
+        sys.path.insert(0, os.path.join(ROOT, "src"))
+        from repro.launch import roofline
+        r = roofline.analyse(rec)
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert r["t_mem_s"] > 0

@@ -1,0 +1,69 @@
+"""Mapping encoding scheme (paper §IV) — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import (
+    MappingEncoding,
+    data_parallel,
+    model_parallel,
+    pipeline_parallel,
+    random_encoding,
+)
+
+
+def test_segments_all_zero_is_single_segment():
+    enc = data_parallel(4, 6, 4)
+    assert enc.segments() == [(0, 6)]
+
+
+def test_segments_all_one_is_columnwise():
+    enc = data_parallel(4, 6, 4)
+    enc.segmentation[:] = 1
+    assert enc.segments() == [(i, i + 1) for i in range(6)]
+
+
+def test_scheduled_order_row_first_when_no_segmentation():
+    enc = data_parallel(2, 3, 4)
+    order = [tuple(x) for x in enc.scheduled_order()]
+    assert order == [(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]
+
+
+def test_scheduled_order_column_first_when_fully_segmented():
+    enc = data_parallel(2, 3, 4)
+    enc.segmentation[:] = 1
+    order = [tuple(x) for x in enc.scheduled_order()]
+    assert order == [(0, 0), (1, 0), (0, 1), (1, 1), (0, 2), (1, 2)]
+
+
+def test_algorithm1_data_parallel():
+    enc = data_parallel(8, 4, 4)
+    for b in range(8):
+        assert (enc.layer_to_chip[b] == b % 4).all()
+    assert enc.segmentation.sum() == 0
+
+
+def test_algorithm1_model_parallel():
+    enc = model_parallel(2, 8, 4)
+    for l in range(8):
+        assert (enc.layer_to_chip[:, l] == l % 4).all()
+
+
+def test_algorithm1_pipeline_parallel():
+    enc = pipeline_parallel(4, 8, 4)
+    # boundary after every C-th layer
+    assert list(enc.segmentation) == [0, 0, 0, 1, 0, 0, 0]
+    for l in range(8):
+        assert (enc.layer_to_chip[:, l] == l % 4).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(rows=st.integers(1, 6), cols=st.integers(1, 12),
+       chips=st.integers(1, 8), seed=st.integers(0, 1000))
+def test_random_encoding_valid_and_order_is_permutation(rows, cols, chips, seed):
+    rng = np.random.default_rng(seed)
+    enc = random_encoding(rng, rows, cols, chips)
+    assert enc.validate(chips)
+    order = enc.scheduled_order()
+    assert len(order) == rows * cols
+    assert len({tuple(x) for x in order}) == rows * cols

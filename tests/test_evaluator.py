@@ -1,0 +1,86 @@
+"""Evaluation engine invariants (paper §V-C)."""
+import numpy as np
+import pytest
+
+from repro.core.encoding import (
+    data_parallel,
+    model_parallel,
+    pipeline_parallel,
+    random_encoding,
+)
+from repro.core.evaluator import CostTables, evaluate
+from repro.core.hardware import make_hardware, monetary_cost
+from repro.core.workload import (
+    LLMSpec,
+    build_execution_graph,
+    decode_request,
+    prefill_request,
+)
+
+SPEC = LLMSpec("t", d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+               d_ff=1024, vocab=1000, n_layers=8)
+HW = make_hardware(64, "M", tensor_parallel=2)
+
+
+def _graph(batch, mb):
+    return build_execution_graph(SPEC, batch, micro_batch_size=mb, tp=2,
+                                 n_blocks=2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    batch = [prefill_request(128), prefill_request(300),
+             decode_request(500), decode_request(90)]
+    g = _graph(batch, 2)
+    return g, CostTables.build(g, HW)
+
+
+def test_latency_at_least_critical_path(setup):
+    g, t = setup
+    enc = pipeline_parallel(g.rows, g.n_cols, HW.n_chiplets)
+    r = evaluate(g, enc, HW, t)
+    # critical path: longest single-row chain of t_proc can't be beaten
+    assert r.latency_s > 0
+    assert r.utilization() <= 1.0 + 1e-9
+    assert r.op_end_s.max() == pytest.approx(r.latency_s)
+
+
+def test_energy_positive_and_additive(setup):
+    g, t = setup
+    enc = data_parallel(g.rows, g.n_cols, HW.n_chiplets)
+    r = evaluate(g, enc, HW, t)
+    assert r.energy_j == pytest.approx(r.e_comp_j + r.e_dram_j + r.e_nop_j)
+    assert r.edp == pytest.approx(r.latency_s * r.energy_j)
+
+
+def test_monetary_cost_independent_of_mapping(setup):
+    g, t = setup
+    r1 = evaluate(g, data_parallel(g.rows, g.n_cols, HW.n_chiplets), HW, t)
+    r2 = evaluate(g, model_parallel(g.rows, g.n_cols, HW.n_chiplets), HW, t)
+    assert r1.mc_total == pytest.approx(r2.mc_total)
+    assert r1.mc_total == pytest.approx(monetary_cost(HW)["mc_total"])
+
+
+def test_monetary_cost_increases_with_bandwidth():
+    lo = make_hardware(64, "M", nop_bw_gbps=32, dram_bw_gbps=16)
+    hi = make_hardware(64, "M", nop_bw_gbps=512, dram_bw_gbps=256)
+    assert monetary_cost(hi)["mc_total"] > monetary_cost(lo)["mc_total"]
+
+
+def test_more_chiplets_reduce_pipeline_latency():
+    batch = [prefill_request(256) for _ in range(8)]
+    g = _graph(batch, 1)
+    small = make_hardware(64, "L", tensor_parallel=2)   # 2 chiplets
+    big = make_hardware(512, "L", tensor_parallel=2)    # 16 chiplets
+    r_small = evaluate(g, pipeline_parallel(g.rows, g.n_cols, small.n_chiplets), small)
+    r_big = evaluate(g, pipeline_parallel(g.rows, g.n_cols, big.n_chiplets), big)
+    assert r_big.latency_s < r_small.latency_s
+
+
+def test_deterministic(setup):
+    g, t = setup
+    rng = np.random.default_rng(0)
+    enc = random_encoding(rng, g.rows, g.n_cols, HW.n_chiplets)
+    r1 = evaluate(g, enc, HW, t)
+    r2 = evaluate(g, enc, HW, t)
+    assert r1.latency_s == r2.latency_s and r1.energy_j == r2.energy_j

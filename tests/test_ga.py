@@ -1,0 +1,70 @@
+"""GA mapping engine: operator validity + convergence."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import random_encoding
+from repro.core.evaluator import CostTables, evaluate
+from repro.core.ga import (
+    GAConfig,
+    crossover,
+    ga_search,
+    mutate,
+    random_search,
+    simulated_annealing_search,
+)
+from repro.core.hardware import make_hardware
+from repro.core.workload import LLMSpec, build_execution_graph, prefill_request
+
+SPEC = LLMSpec("t", 256, 4, 4, 64, 1024, 1000, 8)
+HW = make_hardware(256, "M", tensor_parallel=2)  # 8 chiplets
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), progress=st.floats(0, 1))
+def test_mutation_preserves_validity(seed, progress):
+    rng = np.random.default_rng(seed)
+    enc = random_encoding(rng, 4, 10, HW.n_chiplets)
+    for _ in range(5):
+        mutate(rng, enc, HW.n_chiplets, progress)
+    assert enc.validate(HW.n_chiplets)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_crossover_preserves_validity(seed):
+    rng = np.random.default_rng(seed)
+    a = random_encoding(rng, 4, 10, HW.n_chiplets)
+    b = random_encoding(rng, 4, 10, HW.n_chiplets)
+    child = crossover(rng, a, b)
+    assert child.validate(HW.n_chiplets)
+    assert child.layer_to_chip.shape == a.layer_to_chip.shape
+
+
+def _eval_fn():
+    batch = [prefill_request(64 * (i + 1)) for i in range(4)]
+    g = build_execution_graph(SPEC, batch, 2, tp=2, n_blocks=1)
+    tables = CostTables.build(g, HW)
+
+    def fn(pop):
+        return np.array([evaluate(g, e, HW, tables).edp for e in pop])
+
+    return fn, g
+
+
+def test_ga_improves_over_random():
+    fn, g = _eval_fn()
+    cfg = GAConfig(population=16, generations=8, seed=0)
+    res = ga_search(fn, g.rows, g.n_cols, HW.n_chiplets, cfg)
+    assert res.best_score <= res.history[0]
+    assert res.best_score < res.history[0] * 0.999 or res.history[0] == res.best_score
+    rnd = random_search(fn, g.rows, g.n_cols, HW.n_chiplets,
+                        budget=res.evaluations, seed=0)
+    # GA should not lose to random search by much (usually wins)
+    assert res.best_score <= rnd.best_score * 1.1
+
+
+def test_sa_search_runs():
+    fn, g = _eval_fn()
+    res = simulated_annealing_search(fn, g.rows, g.n_cols, HW.n_chiplets,
+                                     iters=30)
+    assert res.best_score <= res.history[0]

@@ -1,0 +1,44 @@
+"""JAX population evaluator == numpy oracle (exact semantics)."""
+import numpy as np
+import pytest
+
+from repro.core.encoding import pipeline_parallel, random_encoding
+from repro.core.evaluator import CostTables, evaluate
+from repro.core.hardware import make_hardware
+from repro.core.jax_evaluator import PopulationEvaluator
+from repro.core.workload import (
+    LLMSpec,
+    MoESpec,
+    build_execution_graph,
+    decode_request,
+    prefill_request,
+)
+
+
+@pytest.mark.parametrize("spec,batch,mb", [
+    (LLMSpec("dense", 256, 4, 4, 64, 1024, 1000, 8),
+     [prefill_request(128), prefill_request(64), decode_request(300),
+      decode_request(80)], 2),
+    (LLMSpec("moe", 256, 4, 2, 64, 1024, 1000, 8,
+             moe=MoESpec(8, 1, 2, 128)),
+     [decode_request(100 + 37 * i) for i in range(6)], 3),
+    (LLMSpec("mamba", 256, 0, 0, 64, 0, 1000, 8, attn_kind="none",
+             mixer="mamba", d_inner=512, ssm_state=16),
+     [prefill_request(200), decode_request(500)], 1),
+])
+def test_matches_numpy_oracle(spec, batch, mb):
+    hw = make_hardware(64, "M", layout=None, tensor_parallel=2)
+    hw = hw.replace(layout=tuple(["WS", "OS"] * (hw.n_chiplets // 2)))
+    g = build_execution_graph(spec, batch, micro_batch_size=mb, tp=2,
+                              n_blocks=2)
+    tables = CostTables.build(g, hw)
+    pe = PopulationEvaluator(g, tables, hw)
+    rng = np.random.default_rng(0)
+    pop = [pipeline_parallel(g.rows, g.n_cols, hw.n_chiplets)]
+    pop += [random_encoding(rng, g.rows, g.n_cols, hw.n_chiplets)
+            for _ in range(7)]
+    lat, en = pe.evaluate_population(pop)
+    for i, enc in enumerate(pop):
+        r = evaluate(g, enc, hw, tables)
+        assert lat[i] == pytest.approx(r.latency_s, rel=1e-4)
+        assert en[i] == pytest.approx(r.energy_j, rel=1e-4)

@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype):
+    x = RNG.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("b,hq,hkv,lq,lk,d,causal", [
+    (1, 4, 4, 64, 64, 64, True),
+    (2, 8, 2, 96, 160, 64, True),    # GQA + longer KV (cached prefix)
+    (1, 6, 3, 33, 57, 32, False),    # ragged, bidirectional
+    (1, 2, 1, 128, 128, 128, True),  # MXU-aligned
+])
+def test_flash_attention(b, hq, hkv, lq, lk, d, causal, dtype, tol):
+    q, k, v = (_rand((b, hq, lq, d), dtype), _rand((b, hkv, lk, d), dtype),
+               _rand((b, hkv, lk, d), dtype))
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    expect = ref.flash_attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (2, 8, 2, 257, 64),
+    (1, 4, 4, 96, 32),
+    (3, 4, 1, 130, 64),   # MLA-style single shared KV head
+])
+def test_decode_attention(b, hq, hkv, s, d, dtype, tol):
+    q = _rand((b, hq, d), dtype)
+    kc = _rand((b, s, hkv, d), dtype)
+    vc = _rand((b, s, hkv, d), dtype)
+    lens = jnp.asarray(RNG.integers(1, s + 1, size=b), jnp.int32)
+    out = ops.decode_attention(q, kc, vc, lens, block_s=64)
+    expect = ref.decode_attention_reference(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,l,h,p,n,chunk", [
+    (1, 96, 2, 16, 8, 32),
+    (2, 70, 3, 8, 16, 32),   # ragged length vs chunk
+    (1, 128, 1, 32, 32, 64),
+])
+def test_ssd_scan(b, l, h, p, n, chunk):
+    x = _rand((b, l, h, p), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, l, h)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    bm = _rand((b, l, n), jnp.float32)
+    cm = _rand((b, l, n), jnp.float32)
+    y, s_fin = ops.ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+    y_ref, s_ref = ref.ssd_reference(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(s_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), pop=st.integers(1, 4),
+       rows=st.integers(1, 3), cols=st.integers(2, 5), chips=st.integers(1, 4))
+def test_mapping_eval_kernel(seed, pop, rows, cols, chips):
+    rng = np.random.default_rng(seed)
+    t_len = rows * cols
+    t_proc = rng.uniform(0.1, 1.0, size=(pop, t_len)).astype(np.float32)
+    chip = rng.integers(0, chips, size=(pop, t_len)).astype(np.int32)
+    rowv = np.repeat(np.arange(rows), cols).astype(np.int32)
+    colv = np.tile(np.arange(cols), rows).astype(np.int32)
+    pm = np.zeros((cols, cols), bool)
+    for l in range(1, cols):
+        pm[l, l - 1] = True
+    lat = ops.mapping_eval(jnp.asarray(t_proc), jnp.asarray(chip),
+                           jnp.asarray(rowv), jnp.asarray(colv),
+                           jnp.asarray(pm, jnp.float32), rows, chips)
+    expect = ref.mapping_eval_reference(t_proc, chip, rowv, colv, pm,
+                                        rows, chips)
+    np.testing.assert_allclose(np.asarray(lat), expect, rtol=1e-5)

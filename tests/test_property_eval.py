@@ -1,0 +1,109 @@
+"""Property-based tests: evaluation-engine invariants over random
+workloads, hardware, and mappings (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.access import data_access_flags
+from repro.core.encoding import random_encoding
+from repro.core.evaluator import CostTables, evaluate
+from repro.core.hardware import make_hardware
+from repro.core.jax_evaluator import PopulationEvaluator
+from repro.core.workload import (
+    LLMSpec,
+    build_execution_graph,
+    decode_request,
+    prefill_request,
+)
+
+
+def _random_case(seed):
+    rng = np.random.default_rng(seed)
+    spec = LLMSpec(
+        "p", d_model=int(rng.choice([128, 256])), n_heads=4,
+        n_kv_heads=int(rng.choice([2, 4])), head_dim=32,
+        d_ff=int(rng.choice([256, 512])), vocab=1000,
+        n_layers=int(rng.choice([2, 4, 8])),
+    )
+    hw = make_hardware(float(rng.choice([64, 256])), str(rng.choice(["M", "L"])),
+                       tensor_parallel=2)
+    hw = hw.replace(layout=tuple(
+        rng.choice(["WS", "OS"], size=hw.n_chiplets).tolist()))
+    n_req = int(rng.integers(1, 6))
+    batch = []
+    for _ in range(n_req):
+        if rng.random() < 0.5:
+            batch.append(prefill_request(int(rng.integers(8, 400))))
+        else:
+            batch.append(decode_request(int(rng.integers(8, 800))))
+    mb = int(rng.integers(1, n_req + 1))
+    g = build_execution_graph(spec, batch, mb, tp=2, n_blocks=2)
+    enc = random_encoding(rng, g.rows, g.n_cols, hw.n_chiplets,
+                          p_seg=float(rng.random()))
+    return g, hw, enc
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_latency_bracketed_by_critical_path_and_serialisation(seed):
+    g, hw, enc = _random_case(seed)
+    t = CostTables.build(g, hw)
+    r = evaluate(g, enc, hw, t)
+    per_op = r.op_end_s  # end times already include scale
+    assert r.latency_s == pytest.approx(per_op.max())
+    # never faster than the busiest chiplet, never slower than full serial
+    assert r.latency_s >= r.chip_busy_s.max() - 1e-12
+    assert r.latency_s <= (r.t_comp_s + r.t_dram_s + r.t_nop_s) + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_dependencies_respected(seed):
+    g, hw, enc = _random_case(seed)
+    r = evaluate(g, enc, hw)
+    end = r.op_end_s
+    for l, meta in enumerate(g.layers):
+        if meta.pred_lo < 0:
+            continue
+        for b in range(g.rows):
+            pred_end = end[b, meta.pred_lo:meta.pred_hi].max()
+            assert end[b, l] >= pred_end - 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_flags_are_consistent(seed):
+    g, hw, enc = _random_case(seed)
+    fl = data_access_flags(g, enc, hw)
+    # first scheduled op of every weighted column must load weights
+    first_row = enc.scheduled_order()[0][0]
+    # ops with no predecessors fetch nothing
+    for l, meta in enumerate(g.layers):
+        if meta.pred_lo < 0:
+            assert fl.dram_in_bytes[:, l].sum() == 0
+            assert fl.nop_in_bytes[:, l].sum() == 0
+    # NoP byte-hops only where NoP bytes exist
+    assert ((fl.nop_in_byte_hops > 0) <= (fl.nop_in_bytes > 0)).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_jax_evaluator_matches_oracle_randomised(seed):
+    g, hw, enc = _random_case(seed)
+    t = CostTables.build(g, hw)
+    pe = PopulationEvaluator(g, t, hw)
+    lat, en = pe.evaluate_population([enc])
+    r = evaluate(g, enc, hw, t)
+    assert lat[0] == pytest.approx(r.latency_s, rel=1e-4)
+    assert en[0] == pytest.approx(r.energy_j, rel=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_scale_invariance_of_objective_ordering(seed):
+    """Doubling DRAM bandwidth never increases any mapping's latency."""
+    g, hw, enc = _random_case(seed)
+    hw_fast = hw.replace(dram_bw_gbps=hw.dram_bw_gbps * 2)
+    r_slow = evaluate(g, enc, hw)
+    r_fast = evaluate(g, enc, hw_fast)
+    assert r_fast.latency_s <= r_slow.latency_s + 1e-12

@@ -1,0 +1,114 @@
+"""Sharding rules: divisibility fallbacks, stacked layouts, cache specs,
+elastic mesh derivation, collective-bytes parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import all_archs
+from repro.dist.elastic import StragglerMonitor, current_mesh_shape
+from repro.dist.sharding import (
+    cache_partition_spec,
+    constrain,
+    make_cache_shardings,
+    make_param_shardings,
+    param_partition_spec,
+)
+from repro.launch.mesh import make_mesh
+from repro.models import init_cache, init_model
+from repro.models.stacked import stack_cache, stack_params
+
+MESH = make_mesh((1, 1), ("data", "model"))  # 1-device CI mesh
+
+
+class FakeMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_param_rules_basic():
+    m = FakeMesh()
+    assert param_partition_spec("embed/e", (102400, 5120), m) == P("model", None)
+    assert param_partition_spec("blocks/0/attn/wq/w", (5120, 16384), m) \
+        == P(None, "model")
+    assert param_partition_spec("blocks/0/attn/wo/w", (16384, 5120), m) \
+        == P("model", None)
+    # MoE bank: EP over model + FSDP over (pod, data)
+    assert param_partition_spec("blocks/0/moe/wi", (160, 5120, 3072), m) \
+        == P("model", ("pod", "data"), None)
+    # indivisible dims fall back to unsharded
+    assert param_partition_spec("blocks/0/attn/wk/w", (5120, 257), m) \
+        == P(None, None)
+
+
+def test_stacked_param_rules():
+    m = FakeMesh()
+    spec = param_partition_spec("blocks_stacked/0/attn/wq/w",
+                                (60, 5120, 16384), m)
+    assert spec == P(None, None, "model")
+    spec = param_partition_spec("blocks_stacked/0/moe/wi",
+                                (60, 160, 5120, 3072), m)
+    assert spec == P(None, "model", ("pod", "data"), None)
+
+
+def test_cache_rules():
+    m = FakeMesh()
+    # GQA kv=8 divides nothing on model=16 -> sequence parallel fallback
+    assert cache_partition_spec("0/k", (128, 32768, 8, 128), m) \
+        == P(("pod", "data"), "model", None, None)
+    # kv=32 divides -> head sharding
+    assert cache_partition_spec("0/k", (128, 32768, 32, 128), m) \
+        == P(("pod", "data"), None, "model", None)
+    # stacked MLA latent: single kv head -> sequence parallel
+    assert cache_partition_spec("0/kv", (60, 128, 32768, 1, 576), m) \
+        == P(None, ("pod", "data"), "model", None, None)
+    # stacked mamba state
+    assert cache_partition_spec("0/state", (64, 1, 80, 128, 64), m) \
+        == P(None, None, "model", None, None)
+    assert cache_partition_spec("0/len", (60, 128), m) \
+        == P(None, ("pod", "data"))
+
+
+def test_make_shardings_cover_every_leaf():
+    cfg = all_archs()["jamba-v0.1-52b"].reduced()
+    params = stack_params(init_model(jax.random.PRNGKey(0), cfg), cfg)
+    shard = make_param_shardings(MESH, params)
+    assert len(jax.tree.leaves(shard)) == len(jax.tree.leaves(params))
+    cache = stack_cache(init_cache(cfg, 2, 16), cfg)
+    cshard = make_cache_shardings(MESH, cache)
+    assert len(jax.tree.leaves(cshard)) == len(jax.tree.leaves(cache))
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert constrain(x, (("pod", "data"), None), None) is x
+
+
+def test_elastic_mesh_shapes():
+    assert current_mesh_shape(512, 16) == (2, 16, 16)
+    assert current_mesh_shape(256, 16) == (2, 8, 16)
+    assert np.prod(current_mesh_shape(384, 16)) == 384
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(factor=2.0)
+    assert not mon.step(1.0)
+    assert not mon.step(1.1)
+    assert mon.step(5.0)  # 5x the EWMA
+    assert mon.slow_steps == 1
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ar = bf16[8,128]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = f32[16,16]{1,0} all-gather(%y), dimensions={0}
+  %tup = (f32[4,4]{1,0}, f32[2,2]{1,0}) all-to-all(%a, %b)
+  %cp = u32[] collective-permute(%c)
+  %done = bf16[8,128]{1,0} all-reduce-done(%ar)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 8 * 128 * 2
+    assert out["all-gather"] == 16 * 16 * 4
+    assert out["all-to-all"] == 4 * 4 * 4 + 2 * 2 * 4

@@ -1,0 +1,54 @@
+"""Sequence-length traces + serving strategies."""
+import numpy as np
+
+from repro.core.traces import (
+    GOVREPORT,
+    SHAREGPT,
+    chunked_prefill_strategy,
+    decode_batch,
+    orca_strategy,
+    prefill_batch,
+    sample_batches,
+    vllm_strategy,
+)
+from repro.core.workload import DECODE, PREFILL
+
+
+def test_trace_means():
+    rng = np.random.default_rng(0)
+    s = SHAREGPT.sample(rng, 4000)
+    mi = np.mean([x[0] for x in s])
+    mo = np.mean([x[1] for x in s])
+    assert 0.6 * 78 < mi < 1.6 * 78
+    assert 0.6 * 483 < mo < 1.6 * 483
+    g = GOVREPORT.sample(rng, 2000)
+    assert np.mean([x[0] for x in g]) > 5 * np.mean([x[1] for x in g]) * 0.5
+
+
+def test_batch_builders():
+    rng = np.random.default_rng(0)
+    pb = prefill_batch(SHAREGPT, rng, 8)
+    assert all(r.kind == PREFILL and r.q_len == r.kv_len for r in pb)
+    db = decode_batch(SHAREGPT, rng, 8)
+    assert all(r.kind == DECODE and r.q_len == 1 for r in db)
+
+
+def test_strategies_structure():
+    v = vllm_strategy(4096, 500, 16, 3)
+    assert len(v.batches[0]) == 1 and v.batches[0][0].kind == PREFILL
+    assert all(r.kind == DECODE for r in v.batches[1])
+
+    o = orca_strategy(4096, 500, 16, 3)
+    kinds = {r.kind for r in o.batches[0]}
+    assert kinds == {PREFILL, DECODE}  # mixed first batch
+
+    c = chunked_prefill_strategy(4096, 500, 16, 4, chunk=1024)
+    pf = [r for b in c.batches for r in b if r.kind == PREFILL]
+    assert sum(r.q_len for r in pf) == 4096  # chunks cover the prompt
+    assert all(any(r.kind == DECODE for r in b) for b in c.batches)
+
+
+def test_sampling_deterministic():
+    a = sample_batches(SHAREGPT, PREFILL, 4, 2, seed=7)
+    b = sample_batches(SHAREGPT, PREFILL, 4, 2, seed=7)
+    assert [[r for r in x] for x in a] == [[r for r in x] for x in b]

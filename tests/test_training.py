@@ -1,0 +1,87 @@
+"""Training loop: convergence, checkpoint/restart determinism, gradient
+compression error feedback."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs
+from repro.dist.compression import compress_grads, decompress_grads, roundtrip
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, TokenStream
+from repro.training.optimizer import AdamWConfig, adamw_init, lr_schedule
+from repro.training.train_loop import TrainConfig, train
+
+CFG = all_archs()["qwen1.5-0.5b"].reduced()
+
+
+def test_loss_decreases():
+    dc = DataConfig(vocab=CFG.vocab, seq_len=32, global_batch=4, seed=0)
+    tc = TrainConfig(opt=AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=12))
+    _, _, logs = train(CFG, tc, TokenStream(dc), steps=10, log_every=0)
+    assert logs[-1]["loss"] < logs[0]["loss"]
+
+
+def test_checkpoint_restart_bitexact():
+    dc = DataConfig(vocab=CFG.vocab, seq_len=24, global_batch=4, seed=1)
+    tc = TrainConfig(microbatches=2,
+                     opt=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=8))
+    with tempfile.TemporaryDirectory() as d:
+        p1, o1, _ = train(CFG, tc, TokenStream(dc), steps=6, ckpt_dir=d,
+                          ckpt_every=3, log_every=0)
+        assert ckpt.all_steps(d)
+        restored, extra = ckpt.restore(d, 3, {"params": p1, "opt": o1})
+        s2 = TokenStream(dc)
+        s2.restore(extra["data_step"])
+        p2, o2, _ = train(CFG, tc, s2, steps=6, params=restored["params"],
+                          opt_state=restored["opt"], start_step=3, log_every=0)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_prune_keeps_latest():
+    with tempfile.TemporaryDirectory() as d:
+        for s in [1, 2, 3, 4, 5]:
+            ckpt.save(d, s, {"x": jnp.ones(3)}, keep=2)
+        assert ckpt.all_steps(d) == [4, 5]
+        assert ckpt.latest_step(d) == 5
+
+
+def test_data_stream_resumable():
+    dc = DataConfig(vocab=100, seq_len=8, global_batch=2, seed=3)
+    s1 = TokenStream(dc)
+    a = [next(s1) for _ in range(3)]
+    s2 = TokenStream(dc)
+    s2.restore(1)
+    np.testing.assert_array_equal(a[1], next(s2))
+    np.testing.assert_array_equal(a[2], next(s2))
+
+
+def test_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    grads = {"a": jnp.asarray(rng.normal(size=(256, 64)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+    comp, res = compress_grads(grads)
+    deco = decompress_grads(comp)
+    # int8 quantisation error is bounded by scale/2 per element
+    scale = float(jnp.max(jnp.abs(grads["a"]))) / 127.0
+    assert float(jnp.max(jnp.abs(deco["a"] - grads["a"]))) <= scale
+    # residual carries exactly the quantisation error
+    np.testing.assert_allclose(np.asarray(res["a"]),
+                               np.asarray(grads["a"] - deco["a"]), atol=1e-6)
+    # error feedback: feeding the same grad again corrects the bias
+    deco2, res2 = roundtrip(grads, res)
+    total = np.asarray(deco["a"]) + np.asarray(deco2["a"])
+    np.testing.assert_allclose(total, 2 * np.asarray(grads["a"]),
+                               atol=2 * scale)
+
+
+def test_lr_schedule():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(lr_schedule(cfg, 0)) == 0.0
+    assert float(lr_schedule(cfg, 10)) == pytest.approx(1e-3)
+    assert float(lr_schedule(cfg, 100)) == pytest.approx(1e-4, rel=1e-2)
