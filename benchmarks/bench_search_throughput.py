@@ -1,0 +1,192 @@
+"""Mapping-search throughput: device-resident GA loop vs the pre-PR loop
+structure (per-individual Python ``scheduled_order`` + one jitted call per
+batch per generation + per-individual objects through the GA operators).
+
+Reports JSON: steady-state GA evaluations/sec, end-to-end ``co_explore``
+wall-clock, best-score parity, and the jit compile-cache sizes (must stay
+at one entry per (rows, M, C) shape).
+
+Scenario: ``llama3.2-3b`` prefill on the ShareGPT trace (paper §VI-A).
+
+    PYTHONPATH=src python benchmarks/bench_search_throughput.py [--out f.json]
+    COMPASS_FULL=1 ... for paper-scale budgets
+"""
+import argparse
+import json
+import time
+
+from .common import FULL
+
+
+def build_scenario():
+    from repro.configs import all_archs
+    from repro.core.evaluator import CostTables
+    from repro.core.hardware import make_hardware
+    from repro.core.traces import sample_batches, SHAREGPT
+    from repro.core.workload import build_execution_graph
+
+    spec = all_archs()["llama3.2-3b"].llm_spec()
+    hw = make_hardware(512, "L", tensor_parallel=8)
+    hw = hw.replace(layout=tuple(["WS", "OS"] * (hw.n_chiplets // 2)))
+    batches = sample_batches(SHAREGPT, "prefill", 8, 3, seed=0)
+    graphs = [build_execution_graph(spec, b, 2, tp=hw.tensor_parallel,
+                                    n_blocks=4) for b in batches]
+    tables = [CostTables.build(g, hw) for g in graphs]
+    return spec, hw, batches, graphs, tables
+
+
+def bench_eval_throughput(graphs, tables, hw, population: int, n_gens: int):
+    """Steady-state eval cost per GA generation: device-resident group call
+    vs the pre-PR loop structure, on identical populations."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.encoding import StackedPopulation, random_encoding
+    from repro.core.jax_evaluator import (
+        GroupPopulationEvaluator,
+        PopulationEvaluator,
+        _population_pass,
+    )
+
+    rows, m_cols = graphs[0].rows, graphs[0].n_cols
+    rng = np.random.default_rng(0)
+    pop_list = [random_encoding(rng, rows, m_cols, hw.n_chiplets)
+                for _ in range(population)]
+    pop = StackedPopulation.from_encodings(pop_list)
+    n_evals = len(graphs) * population
+
+    ge = GroupPopulationEvaluator(graphs, tables, hw)
+    ge.evaluate_population(pop)                           # compile
+    t0 = time.perf_counter()
+    for _ in range(n_gens):
+        ge.evaluate_population(pop)
+    t_new = (time.perf_counter() - t0) / n_gens
+
+    # pre-PR loop structure: per-individual Python scheduled_order, one
+    # jitted call per batch per generation (kernel itself is current)
+    evs = [PopulationEvaluator(g, t, hw) for g, t in zip(graphs, tables)]
+
+    def legacy_generation():
+        for i, ev in enumerate(evs):
+            orders = np.stack([enc.scheduled_order() for enc in pop_list])
+            l2cs = np.stack([enc.layer_to_chip for enc in pop_list])
+            lat, _ = _population_pass(jnp.asarray(orders), jnp.asarray(l2cs),
+                                      n_chips=ev._n_chips, **ev._static)
+            np.asarray(lat)
+
+    legacy_generation()                                   # compile
+    t0 = time.perf_counter()
+    for _ in range(n_gens):
+        legacy_generation()
+    t_old = (time.perf_counter() - t0) / n_gens
+
+    return {
+        "population": population,
+        "batches": len(graphs),
+        "graph_shape": [rows, m_cols],
+        "new_ms_per_generation": round(t_new * 1e3, 2),
+        "legacy_loop_ms_per_generation": round(t_old * 1e3, 2),
+        "new_evals_per_sec": round(n_evals / t_new),
+        "legacy_loop_evals_per_sec": round(n_evals / t_old),
+        "speedup_vs_legacy_loop": round(t_old / t_new, 2),
+    }
+
+
+def bench_ga_parity(graphs, tables, hw, ga_cfg):
+    """Same GAConfig through the stacked fast path and through the
+    list-of-encodings boundary API: best scores must agree within noise."""
+    import numpy as np
+    from repro.core.compass import _make_population_eval
+    from repro.core.ga import ga_search
+
+    group_eval = _make_population_eval(graphs, tables, hw, use_jax=None)
+
+    def stacked_fn(pop):
+        lat, en = group_eval(pop)
+        return (lat * en).mean(axis=0)
+
+    stacked_fn.accepts_stacked = True
+
+    def list_fn(pop):
+        lat, en = group_eval(pop)
+        return (lat * en).mean(axis=0)
+
+    rows, m_cols = graphs[0].rows, graphs[0].n_cols
+    t0 = time.perf_counter()
+    res_fast = ga_search(stacked_fn, rows, m_cols, hw.n_chiplets, ga_cfg)
+    t_fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_list = ga_search(list_fn, rows, m_cols, hw.n_chiplets, ga_cfg)
+    t_list = time.perf_counter() - t0
+    rel = abs(res_fast.best_score - res_list.best_score) \
+        / max(res_list.best_score, 1e-30)
+    return {
+        "ga_population": ga_cfg.population,
+        "ga_generations": ga_cfg.generations,
+        "stacked_best_score": res_fast.best_score,
+        "boundary_api_best_score": res_list.best_score,
+        "best_score_rel_diff": rel,
+        "stacked_wall_s": round(t_fast, 2),
+        "boundary_api_wall_s": round(t_list, 2),
+        "evaluations": res_fast.evaluations,
+    }
+
+
+def bench_co_explore(ga_cfg):
+    import numpy as np  # noqa: F401
+    from repro.configs import all_archs
+    from repro.core.compass import Scenario, co_explore
+    from repro.core.jax_evaluator import jit_cache_sizes
+    from repro.core.traces import SHAREGPT
+
+    spec = all_archs()["llama3.2-3b"].llm_spec()
+    scenario = Scenario("llama3_2_3b_prefill", spec, target_tops=512,
+                        phase="prefill", trace=SHAREGPT, batch_size=8,
+                        n_batches=3, n_blocks=4)
+    iters, init = (24, 8) if FULL else (4, 3)
+    t0 = time.perf_counter()
+    res = co_explore(scenario, bo_iters=iters, bo_init=init,
+                     ga_config=ga_cfg, seed=0)
+    wall = time.perf_counter() - t0
+    return {
+        "bo_iters": iters,
+        "bo_init": init,
+        "wall_s": round(wall, 2),
+        "best_score": res.bo.best_score,
+        "best_hardware": {
+            "spec": res.hardware.spec_name,
+            "grid": list(res.hardware.grid),
+            "nop_bw_gbps": res.hardware.nop_bw_gbps,
+            "dram_bw_gbps": res.hardware.dram_bw_gbps,
+        },
+        "jit_cache_sizes": jit_cache_sizes(),
+    }
+
+
+def run(out_path: str | None = None):
+    from repro.core.ga import GAConfig
+
+    ga_cfg = GAConfig(population=120, generations=100) if FULL \
+        else GAConfig(population=64, generations=12)
+    spec, hw, batches, graphs, tables = build_scenario()
+    rec = {
+        "benchmark": "search_throughput",
+        "scenario": "llama3_2_3b prefill (ShareGPT)",
+        "eval_throughput": bench_eval_throughput(
+            graphs, tables, hw, population=ga_cfg.population,
+            n_gens=20 if not FULL else 50),
+        "ga_parity": bench_ga_parity(graphs, tables, hw, ga_cfg),
+        "co_explore": bench_co_explore(ga_cfg),
+    }
+    text = json.dumps(rec, indent=2)
+    print(text)
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(text + "\n")
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="write JSON here too")
+    args = ap.parse_args()
+    run(args.out)

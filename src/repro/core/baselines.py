@@ -161,9 +161,11 @@ def moham_style_search(
             if key not in encs:
                 eval_pop = _make_population_eval([g], [tables], hw, None)
 
-                def eval_fn(pop):
-                    return np.array([r[0] * r[1] for r in eval_pop(0, pop)])
+                def eval_fn(pop, eval_pop=eval_pop):
+                    b_lat, b_en = eval_pop(pop)           # (1, P)
+                    return (b_lat * b_en)[0]
 
+                eval_fn.accepts_stacked = True
                 res = ga_search(eval_fn, g.rows, g.n_cols, hw.n_chiplets, ga_cfg)
                 encs[key] = res.best
             r = evaluate(g, encs[key], hw, tables)

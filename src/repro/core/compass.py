@@ -14,13 +14,14 @@ mapping — the mapping must serve the *distribution*, not a single batch
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Sequence
 
 import numpy as np
 
 from .bo import BOResult, HardwarePoint, bo_search
-from .encoding import MappingEncoding
+from .encoding import MappingEncoding, as_stacked
 from .evaluator import CostTables, EvalResult, evaluate
 from .ga import GAConfig, GAResult, ga_search
 from .hardware import HardwareConfig, monetary_cost
@@ -110,23 +111,22 @@ def search_mapping(
         key = (g.rows, g.n_cols)
         groups.setdefault(key, []).append(i)
 
-    eval_batch_fn = _make_population_eval(graphs, tables, hw, use_jax)
-
     encodings: dict[tuple, MappingEncoding] = {}
     ga_results: list[GAResult] = []
     per_batch: list[EvalResult | None] = [None] * len(graphs)
     for key, idxs in groups.items():
         rows, m_cols = key
+        # all structurally-identical batches of the group are evaluated in
+        # ONE jitted call per generation (vmap over batches x population)
+        group_eval = _make_population_eval(
+            [graphs[i] for i in idxs], [tables[i] for i in idxs], hw, use_jax)
 
-        def eval_fn(pop, idxs=idxs):
-            scores = np.zeros(len(pop))
-            for i in idxs:
-                res = eval_batch_fn(i, pop)
-                scores += np.array([
-                    _objective_value(r[0], r[1], 1.0, objective) for r in res
-                ])
-            return scores / len(idxs)
+        def eval_fn(pop, group_eval=group_eval):
+            lat, en = group_eval(pop)                       # (B, P)
+            obj = _objective_value(lat, en, 1.0, objective)
+            return np.asarray(obj).mean(axis=0)
 
+        eval_fn.accepts_stacked = True
         res = ga_search(eval_fn, rows, m_cols, hw.n_chiplets, ga_config)
         encodings[key] = res.best
         ga_results.append(res)
@@ -144,31 +144,37 @@ def search_mapping(
 
 
 def _make_population_eval(graphs, tables, hw, use_jax: bool | None):
-    """Returns eval(i, population) -> [(latency, energy)] for batch i.
+    """Returns eval(population) -> ((B, P) latency_s, (B, P) energy_j) over
+    the group's batches.
 
-    Uses the JAX population evaluator when available (one jitted call per
-    generation); falls back to the numpy oracle.
-    """
+    Uses the JAX group evaluator when available (one jitted call per GA
+    generation for ALL batches of the group); ``use_jax=True`` raises on any
+    failure, ``use_jax=None`` warns — loudly, a silent numpy fallback is an
+    order-of-magnitude GA slowdown — and degrades to the numpy oracle."""
     if use_jax is None or use_jax:
         try:
-            from .jax_evaluator import PopulationEvaluator
+            from . import jax_evaluator
 
-            evals = [PopulationEvaluator(g, t, hw) for g, t in zip(graphs, tables)]
-
-            def eval_jax(i, pop):
-                lat, en = evals[i].evaluate_population(pop)
-                return list(zip(lat.tolist(), en.tolist()))
-
-            return eval_jax
-        except Exception:
+            ge = jax_evaluator.GroupPopulationEvaluator(graphs, tables, hw)
+            return ge.evaluate_population
+        except Exception as e:
             if use_jax:
                 raise
-    def eval_np(i, pop):
-        out = []
-        for enc in pop:
-            r = evaluate(graphs[i], enc, hw, tables[i])
-            out.append((r.latency_s, r.energy_j))
-        return out
+            warnings.warn(
+                "JAX population evaluator unavailable — falling back to the "
+                f"numpy oracle (much slower mapping search): {e!r}",
+                RuntimeWarning, stacklevel=2)
+
+    def eval_np(population):
+        pop = as_stacked(population).to_encodings()
+        lat = np.zeros((len(graphs), len(pop)))
+        en = np.zeros((len(graphs), len(pop)))
+        for bi, (g, t) in enumerate(zip(graphs, tables)):
+            for pi, enc in enumerate(pop):
+                r = evaluate(g, enc, hw, t)
+                lat[bi, pi] = r.latency_s
+                en[bi, pi] = r.energy_j
+        return lat, en
 
     return eval_np
 

@@ -37,6 +37,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 from .hardware import (
     BYTES_PER_ELEM,
     E_GLB_PJ_PER_BYTE,
@@ -142,6 +144,87 @@ def gemm_cost(
         input_bytes=inp * BYTES_PER_ELEM,
         output_bytes=out * BYTES_PER_ELEM,
         psum_spill_bytes=0.0,
+        input_reread_factor=rr,
+        ws_resident_ok=kn <= cap_res,
+    )
+
+
+@dataclass(frozen=True)
+class GemmCostBatch:
+    """``gemm_cost`` over a whole descriptor batch — every field is a (G,)
+    float64/bool array. Semantics match the scalar path exactly (same tile
+    grid, same first-strict-minimum tie-break); ``post_flops`` is *not*
+    folded in here — it is separable (added after tile selection) and the
+    batched caller accounts it per op."""
+
+    compute_cycles: np.ndarray
+    mac_energy_pj: np.ndarray
+    glb_energy_pj: np.ndarray
+    weight_bytes: np.ndarray
+    input_bytes: np.ndarray
+    output_bytes: np.ndarray
+    psum_spill_bytes: np.ndarray
+    input_reread_factor: np.ndarray
+    ws_resident_ok: np.ndarray
+
+
+def gemm_cost_batch(m, k, n, spec: ChipletSpec, dataflow: str) -> GemmCostBatch:
+    """Vectorised ``gemm_cost`` over (G,) GEMM-shape arrays: the 8-entry
+    tile grid is evaluated as one (G, 8) array sweep and reduced with a
+    first-minimum ``argmin`` (== the scalar loop's strict-< update)."""
+    m = np.maximum(1, np.asarray(m, dtype=np.int64))
+    k = np.maximum(1, np.asarray(k, dtype=np.int64))
+    n = np.maximum(1, np.asarray(n, dtype=np.int64))
+    a = spec.array_dim
+    glb_elems = spec.glb_bytes // BYTES_PER_ELEM
+    cap_res = int(glb_elems * RESIDENT_FRACTION)
+    cap_str = int(glb_elems * STREAM_FRACTION)
+    macs = m.astype(np.float64) * k * n
+    kn = k.astype(np.float64) * n
+    mk = m.astype(np.float64) * k
+    mn = m.astype(np.float64) * n
+    psum_glb = 2.0 * mn * np.maximum(0, _ceil_div(k, a) - 1)
+
+    grid = np.asarray(_TILE_GRID, dtype=np.int64)[None, :]          # (1, T)
+    kc, nc, mc2 = k[:, None], n[:, None], m[:, None]
+    knc, mkc, mnc = kn[:, None], mk[:, None], mn[:, None]
+    if dataflow == "WS":
+        cycles = (_ceil_div(k, a) * _ceil_div(n, a) * (m + a)).astype(np.float64)
+        tk = np.minimum(grid, kc)
+        tn = np.minimum(nc, np.maximum(1, cap_res // tk))
+        cn = _ceil_div(nc, tn)
+        mc = np.minimum(mc2, np.maximum(1, cap_str // tn))          # psum strip
+        n_chunks = _ceil_div(mc2, mc)
+        w = np.where(knc <= cap_res, knc, knc * n_chunks)           # rotation
+        rr = np.where(mc * kc <= cap_str, 1.0, cn.astype(np.float64))
+        inp = mkc * rr
+        glb = knc + mkc * cn + psum_glb[:, None] + mnc
+    elif dataflow == "OS":
+        cycles = (_ceil_div(m, a) * _ceil_div(n, a) * (k + a)).astype(np.float64)
+        tm = np.minimum(grid, mc2)
+        tn = np.minimum(nc, np.maximum(1, cap_res // tm))
+        cm = _ceil_div(mc2, tm)
+        cn = _ceil_div(nc, tn)
+        w = np.where(knc <= cap_str, knc, knc * cm)                 # restream
+        rr = np.where(mkc <= cap_str, 1.0, cn.astype(np.float64))
+        inp = mkc * rr
+        glb = mnc + mkc * cn + knc * cm + psum_glb[:, None]
+    else:
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+
+    tot = w + inp + mnc
+    best = np.argmin(tot, axis=1)
+    pick = (np.arange(len(best)), best)
+    w, inp, rr, glb = w[pick], inp[pick], rr[pick], glb[pick]
+
+    return GemmCostBatch(
+        compute_cycles=cycles,
+        mac_energy_pj=macs * E_MAC_PJ,
+        glb_energy_pj=glb * BYTES_PER_ELEM * E_GLB_PJ_PER_BYTE,
+        weight_bytes=w * BYTES_PER_ELEM,
+        input_bytes=inp * BYTES_PER_ELEM,
+        output_bytes=mn * BYTES_PER_ELEM,
+        psum_spill_bytes=np.zeros_like(mn),
         input_reread_factor=rr,
         ws_resident_ok=kn <= cap_res,
     )

@@ -74,6 +74,126 @@ class MappingEncoding:
 
 
 # --------------------------------------------------------------------------
+# Stacked populations (array-of-structs -> struct-of-arrays boundary)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class StackedPopulation:
+    """A GA population as stacked arrays: (P, M-1) segmentation matrix and
+    (P, rows, M) layer_to_chip tensor. ``MappingEncoding`` remains the
+    single-individual boundary API; this is the population-batched carrier
+    the vectorised GA operators and the JAX evaluators exchange."""
+
+    segmentation: np.ndarray   # (P, M-1) uint8
+    layer_to_chip: np.ndarray  # (P, rows, M) int32
+
+    def __post_init__(self):
+        self.segmentation = np.asarray(self.segmentation, dtype=np.uint8)
+        self.layer_to_chip = np.asarray(self.layer_to_chip, dtype=np.int32)
+
+    def __len__(self) -> int:
+        return self.layer_to_chip.shape[0]
+
+    @property
+    def rows(self) -> int:
+        return self.layer_to_chip.shape[1]
+
+    @property
+    def n_cols(self) -> int:
+        return self.layer_to_chip.shape[2]
+
+    @staticmethod
+    def from_encodings(pop: "list[MappingEncoding]") -> "StackedPopulation":
+        return StackedPopulation(
+            np.stack([e.segmentation for e in pop]),
+            np.stack([e.layer_to_chip for e in pop]))
+
+    def to_encodings(self) -> "list[MappingEncoding]":
+        return [MappingEncoding(self.segmentation[i], self.layer_to_chip[i])
+                for i in range(len(self))]
+
+    def individual(self, i: int) -> MappingEncoding:
+        return MappingEncoding(self.segmentation[i].copy(),
+                               self.layer_to_chip[i].copy())
+
+
+def as_stacked(population) -> StackedPopulation:
+    if isinstance(population, StackedPopulation):
+        return population
+    return StackedPopulation.from_encodings(list(population))
+
+
+# --------------------------------------------------------------------------
+# Population-level scheduled orders (vectorised Algorithm 2 loop nest)
+# --------------------------------------------------------------------------
+
+
+def scheduled_orders(segmentations: np.ndarray, rows: int,
+                     m_cols: int) -> np.ndarray:
+    """``MappingEncoding.scheduled_order`` for a whole population at once.
+
+    The scheduling order (segment, micro_batch, layer-within-segment) is the
+    lexicographic sort of ops by key (seg_id[l], b, l), where seg_id is the
+    prefix-sum of segmentation bits — one argsort over the (P, rows*M) key
+    matrix replaces the per-individual triple Python loop.
+
+    segmentations: (P, M-1) 0/1 array -> (P, rows*M, 2) int32 (row, col).
+    """
+    seg = np.asarray(segmentations)
+    if seg.ndim == 1:
+        seg = seg[None, :]
+    p = seg.shape[0]
+    seg_id = np.zeros((p, m_cols), dtype=np.int64)
+    if m_cols > 1:
+        np.cumsum(seg[:, : m_cols - 1], axis=1, out=seg_id[:, 1:])
+    b_ids = np.arange(rows, dtype=np.int64)[None, :, None]
+    l_ids = np.arange(m_cols, dtype=np.int64)[None, None, :]
+    key = (seg_id[:, None, :] * rows + b_ids) * m_cols + l_ids
+    idx = np.argsort(key.reshape(p, rows * m_cols), axis=1)
+    b, l = np.divmod(idx, m_cols)
+    return np.stack([b, l], axis=-1).astype(np.int32)
+
+
+class ScheduledOrderCache:
+    """Per-individual memoisation of scheduled orders keyed on the
+    segmentation bits: across GA generations most individuals keep their
+    segmentation (elites, children without a seg mutation), so their (T, 2)
+    order tensors are reused and only the changed rows are re-derived (in
+    one vectorised ``scheduled_orders`` call)."""
+
+    def __init__(self, rows: int, m_cols: int, capacity: int = 8192):
+        self.rows, self.m_cols = rows, m_cols
+        self.capacity = capacity
+        self._cache: dict[bytes, np.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def orders(self, segmentations: np.ndarray) -> np.ndarray:
+        seg = np.ascontiguousarray(np.asarray(segmentations, dtype=np.uint8))
+        p = seg.shape[0]
+        out = np.empty((p, self.rows * self.m_cols, 2), dtype=np.int32)
+        missing: list[int] = []
+        keys = [seg[i].tobytes() for i in range(p)]
+        for i, kb in enumerate(keys):
+            hit = self._cache.get(kb)
+            if hit is None:
+                missing.append(i)
+            else:
+                out[i] = hit
+                self.hits += 1
+        if missing:
+            self.misses += len(missing)
+            fresh = scheduled_orders(seg[missing], self.rows, self.m_cols)
+            if len(self._cache) + len(missing) > self.capacity:
+                self._cache.clear()
+            for j, i in enumerate(missing):
+                out[i] = fresh[j]
+                self._cache[keys[i]] = fresh[j]
+        return out
+
+
+# --------------------------------------------------------------------------
 # Algorithm 1 — common parallelism paradigms as encodings
 # --------------------------------------------------------------------------
 

@@ -19,7 +19,13 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from .encoding import MappingEncoding, pipeline_parallel, model_parallel, random_encoding
+from .encoding import (
+    MappingEncoding,
+    StackedPopulation,
+    model_parallel,
+    pipeline_parallel,
+    random_encoding,
+)
 
 
 @dataclass
@@ -130,17 +136,21 @@ def _seg_mutate(rng, enc: MappingEncoding):
         s[i], s[i + 1] = s[i + 1], s[i]
 
 
-def mutate(rng, enc: MappingEncoding, n_chips: int, progress: float):
-    """Phase-adaptive mutation: early generations favour graph-level
+def _op_weights(progress: float) -> np.ndarray:
+    """Phase-adaptive operator weights: early generations favour graph-level
     operators, late generations layer-level ones (paper §V-A)."""
-    # class weights interpolate exploration -> exploitation
     w_layer = 0.2 + 0.6 * progress
     w_sub = 0.3
     w_graph = max(0.05, 0.5 - 0.5 * progress)
     class_w = np.array([w_layer, w_sub, w_graph])
     op_w = np.array([class_w[_OP_IMPACT[i]] for i in range(len(_L2C_OPS))])
-    op_w = op_w / op_w.sum()
-    op = rng.choice(len(_L2C_OPS), p=op_w)
+    return op_w / op_w.sum()
+
+
+def mutate(rng, enc: MappingEncoding, n_chips: int, progress: float):
+    """Per-individual mutation (the reference/boundary API; the GA inner
+    loop uses the vectorised ``mutate_population``)."""
+    op = rng.choice(len(_L2C_OPS), p=_op_weights(progress))
     _L2C_OPS[op](rng, enc, n_chips)
     if rng.random() < 0.3:
         _seg_mutate(rng, enc)
@@ -160,6 +170,126 @@ def crossover(rng, a: MappingEncoding, b: MappingEncoding) -> MappingEncoding:
             src = a if rng.random() < 0.5 else b
             child.layer_to_chip[row, lo:hi] = src.layer_to_chip[row, lo:hi]
     return child
+
+
+# --- vectorised population operators -----------------------------------------
+#
+# The GA inner loop operates on the stacked (P, rows, M) layer_to_chip
+# tensor and (P, M-1) segmentation matrix; per-individual objects are only
+# materialised at the API boundary. Semantics match the per-individual
+# operators above (same operator set, same probabilities); the subgraph /
+# segment-aware operators (4-6) dispatch to the per-individual functions on
+# array *views* of their (typically small) subsets, everything else is pure
+# array code.
+
+
+def _k_distinct(rng, n: int, k: int, size: int) -> np.ndarray:
+    """(size, k) row-wise distinct draws from [0, n) — vectorised
+    without-replacement sampling via argpartition of uniforms."""
+    k = min(k, n)
+    u = rng.random((size, n))
+    return np.argpartition(u, k - 1, axis=1)[:, :k]
+
+
+def tournament_select(rng, scores: np.ndarray, k: int, n: int) -> np.ndarray:
+    """(n,) winner indices of n independent k-tournaments (lower = better)."""
+    cand = _k_distinct(rng, len(scores), k, n)
+    return cand[np.arange(n), np.argmin(scores[cand], axis=1)]
+
+
+def crossover_population(rng, seg_a, l2c_a, seg_b,
+                         l2c_b) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorised crossover of parent-array pairs: bitwise segmentation
+    crossover + subgraph-level layer_to_chip inheritance (each child's
+    (row, segment) slice comes intact from one parent)."""
+    n, m_sub = seg_a.shape
+    _, rows, m_cols = l2c_a.shape
+    if m_sub:
+        mask = rng.integers(0, 2, size=(n, m_sub)).astype(bool)
+        seg = np.where(mask, seg_a, seg_b).astype(np.uint8)
+    else:
+        seg = seg_a.copy()
+    # child's segment id per column from its own segmentation bits
+    seg_id = np.zeros((n, m_cols), dtype=np.int64)
+    if m_cols > 1:
+        np.cumsum(seg[:, : m_cols - 1], axis=1, out=seg_id[:, 1:])
+    # one parent choice per (child, row, segment-slot)
+    choose_a = rng.random((n, rows, m_cols)) < 0.5
+    ch = choose_a[np.arange(n)[:, None, None],
+                  np.arange(rows)[None, :, None],
+                  seg_id[:, None, :]]
+    l2c = np.where(ch, l2c_a, l2c_b).astype(np.int32)
+    return seg, l2c
+
+
+def mutate_population(rng, pop: StackedPopulation, n_chips: int,
+                      progress: float, rate: float = 1.0) -> None:
+    """Vectorised phase-adaptive mutation, in place on the stacked arrays.
+    Each individual mutates with probability ``rate``; operator and
+    segmentation-mutation probabilities match ``mutate``."""
+    seg, l2c = pop.segmentation, pop.layer_to_chip
+    p, rows, m_cols = l2c.shape
+    do = rng.random(p) < rate
+    ops = rng.choice(len(_L2C_OPS), size=p, p=_op_weights(progress))
+
+    idx = np.nonzero(do & (ops == 0))[0]                  # op1: replace one
+    if idx.size:
+        b = rng.integers(rows, size=idx.size)
+        l = rng.integers(m_cols, size=idx.size)
+        l2c[idx, b, l] = rng.integers(n_chips, size=idx.size)
+
+    idx = np.nonzero(do & (ops == 1))[0]                  # op2: swap adj layer
+    if idx.size and m_cols >= 2:
+        b = rng.integers(rows, size=idx.size)
+        l = rng.integers(m_cols - 1, size=idx.size)
+        tmp = l2c[idx, b, l]
+        l2c[idx, b, l] = l2c[idx, b, l + 1]
+        l2c[idx, b, l + 1] = tmp
+
+    idx = np.nonzero(do & (ops == 2))[0]                  # op3: swap adj batch
+    if idx.size and rows >= 2:
+        b = rng.integers(rows - 1, size=idx.size)
+        l = rng.integers(m_cols, size=idx.size)
+        tmp = l2c[idx, b, l]
+        l2c[idx, b, l] = l2c[idx, b + 1, l]
+        l2c[idx, b + 1, l] = tmp
+
+    idx = np.nonzero(do & (ops == 6))[0]                  # op7: swap batches
+    if idx.size and rows >= 2:
+        pair = _k_distinct(rng, rows, 2, idx.size)
+        i, j = pair[:, 0], pair[:, 1]
+        tmp = l2c[idx, i].copy()
+        l2c[idx, i] = l2c[idx, j]
+        l2c[idx, j] = tmp
+
+    # segment-aware operators: per-individual on array views of the subset
+    for i in np.nonzero(do & np.isin(ops, (3, 4, 5)))[0]:
+        _L2C_OPS[ops[i]](rng, MappingEncoding(seg[i], l2c[i]), n_chips)
+
+    # segmentation mutation (bit-flip / neighbour bit-swap, p=0.3)
+    if m_cols > 1:
+        idx = np.nonzero(do & (rng.random(p) < 0.3))[0]
+        if idx.size:
+            flip = rng.random(idx.size) < 0.5
+            fi = idx[flip]
+            if fi.size:
+                pos = rng.integers(m_cols - 1, size=fi.size)
+                seg[fi, pos] ^= 1
+            si = idx[~flip]
+            if si.size and m_cols >= 3:
+                pos = rng.integers(m_cols - 2, size=si.size)
+                tmp = seg[si, pos]
+                seg[si, pos] = seg[si, pos + 1]
+                seg[si, pos + 1] = tmp
+
+
+def score_population(eval_fn: Callable, pop: StackedPopulation) -> np.ndarray:
+    """Calls ``eval_fn`` with the stacked population when it advertises
+    ``accepts_stacked`` (the device-resident path), else with a list of
+    ``MappingEncoding`` views (the boundary API)."""
+    if getattr(eval_fn, "accepts_stacked", False):
+        return np.asarray(eval_fn(pop), dtype=float)
+    return np.asarray(eval_fn(pop.to_encodings()), dtype=float)
 
 
 def seed_population(rng, rows: int, m_cols: int, n_chips: int,
@@ -182,41 +312,49 @@ def ga_search(
     config: GAConfig | None = None,
 ) -> GAResult:
     """Minimise ``eval_fn`` (vectorised over a population) over the mapping
-    space. Lower score = better."""
+    space. Lower score = better.
+
+    The loop is population-batched end to end: selection / crossover /
+    mutation operate on the stacked arrays, and ``eval_fn`` receives the
+    whole ``StackedPopulation`` when it advertises ``accepts_stacked``
+    (one jitted device call per generation), else a list of encodings."""
     cfg = config or GAConfig()
     rng = np.random.default_rng(cfg.seed)
-    pop = seed_population(rng, rows, m_cols, n_chips, cfg.population)
-    scores = np.asarray(eval_fn(pop), dtype=float)
+    pop = StackedPopulation.from_encodings(
+        seed_population(rng, rows, m_cols, n_chips, cfg.population))
+    scores = score_population(eval_fn, pop)
     n_eval = len(pop)
     history = [float(scores.min())]
 
     for gen in range(cfg.generations):
         progress = gen / max(cfg.generations - 1, 1)
         order = np.argsort(scores)
-        elite = [pop[i].copy() for i in order[: cfg.elite]]
+        elite_seg = pop.segmentation[order[: cfg.elite]].copy()
+        elite_l2c = pop.layer_to_chip[order[: cfg.elite]].copy()
 
-        children: list[MappingEncoding] = []
-        while len(children) < cfg.population - cfg.elite:
-            # tournament selection
-            def tourney():
-                idx = rng.choice(len(pop), size=min(cfg.tournament_k, len(pop)),
-                                 replace=False)
-                return pop[idx[np.argmin(scores[idx])]]
+        n_child = max(0, cfg.population - cfg.elite)
+        p1 = tournament_select(rng, scores, cfg.tournament_k, n_child)
+        p2 = tournament_select(rng, scores, cfg.tournament_k, n_child)
+        c_seg, c_l2c = crossover_population(
+            rng, pop.segmentation[p1], pop.layer_to_chip[p1],
+            pop.segmentation[p2], pop.layer_to_chip[p2])
+        do_cx = rng.random(n_child) < cfg.crossover_rate
+        c_seg = np.where(do_cx[:, None], c_seg, pop.segmentation[p1])
+        c_l2c = np.where(do_cx[:, None, None], c_l2c, pop.layer_to_chip[p1])
+        children = StackedPopulation(c_seg, c_l2c)
+        mutate_population(rng, children, n_chips, progress,
+                          rate=cfg.mutation_rate)
 
-            p1, p2 = tourney(), tourney()
-            child = (crossover(rng, p1, p2) if rng.random() < cfg.crossover_rate
-                     else p1.copy())
-            if rng.random() < cfg.mutation_rate:
-                mutate(rng, child, n_chips, progress)
-            children.append(child)
-
-        pop = elite + children
-        scores = np.asarray(eval_fn(pop), dtype=float)
+        pop = StackedPopulation(
+            np.concatenate([elite_seg, children.segmentation]),
+            np.concatenate([elite_l2c, children.layer_to_chip]))
+        scores = score_population(eval_fn, pop)
         n_eval += len(pop)
         history.append(float(scores.min()))
 
     best_i = int(np.argmin(scores))
-    return GAResult(best=pop[best_i], best_score=float(scores[best_i]),
+    return GAResult(best=pop.individual(best_i),
+                    best_score=float(scores[best_i]),
                     history=history, evaluations=n_eval)
 
 

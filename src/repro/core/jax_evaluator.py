@@ -2,9 +2,31 @@
 
 The paper reports ~3 minutes per mapping search on a 128-core server — the
 GA's evaluation loop is the DSE hot spot. Here the whole population is
-evaluated in one jitted call: two ``lax.scan`` passes over the scheduled op
-order (Algorithm-2 flag scan, then timing simulation), ``vmap``-ed over the
-population. Semantics match ``evaluator.evaluate`` exactly (tested to 1e-6).
+evaluated in one jitted call, structured as:
+
+* **structural pass** (per individual, shared by every batch of a group):
+  Algorithm 2's sequential chip-status scan re-expressed densely — the
+  status table "last (row, col) executed on chip c before step t" is a
+  prefix-max over the schedule, so weight-residency / liveness / write-out
+  flags become pure gathers with no sequential dependency;
+* **cost contraction** (per batch x individual): the (rows, M, M) liveness
+  masks contract with the per-batch byte tables into NoP/DRAM traffic and
+  ``T_proc``;
+* **timing pass** (per batch x individual): the only truly sequential part
+  — the makespan recurrence — as a ``lax.scan`` in schedule order with
+  padded predecessor-position gathers (state is a (T,) end vector + (C,)
+  chip-free vector, not the full (rows, M) matrix).
+
+Semantics match ``evaluator.evaluate`` exactly (tested to 1e-6).
+
+Two entry points share this body: ``PopulationEvaluator`` (one graph) and
+``GroupPopulationEvaluator`` (all structurally-identical batches of a
+``search_mapping`` group vmapped on a leading batch axis — a whole GA
+generation is ONE jitted call). Both are module-level ``jax.jit`` functions,
+so the compile cache is keyed on shapes only: repeated BO iterations with
+the same (rows, M, C) never recompile. Scheduled orders come from
+``encoding.ScheduledOrderCache`` — per-individual Python loops never run
+when the segmentation is unchanged.
 
 A Pallas TPU kernel with the same tiling structure lives in
 ``repro.kernels.mapping_eval`` for the timing recurrence; this module is the
@@ -20,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .encoding import MappingEncoding
+from .encoding import MappingEncoding, ScheduledOrderCache, as_stacked
 from .evaluator import CostTables
 from .hardware import (
     DATAFLOWS,
@@ -32,18 +54,140 @@ from .workload import ExecutionGraph
 
 available = True
 
+_SCAN_UNROLL = 8
 
-@partial(jax.jit, static_argnames=("n_chips",))
-def _population_pass(
+
+def _structural_pass(order, lc, n_succ, hops, pred_cols, pred_valid,
+                     n_chips: int):
+    """Mapping-only quantities for one individual: Algorithm-2 flags as
+    dense gathers plus the schedule-order index tensors the timing scan
+    needs. Predecessors are contiguous column intervals of width <= W, so
+    everything stays on narrow (rows, M, W) tensors indexed by
+    ``pred_cols`` instead of dense (rows, M, M). Returns a dict of arrays."""
+    rows, m_cols = lc.shape
+    T = order.shape[0]
+    b_seq, l_seq = order[:, 0], order[:, 1]
+    chip_seq = lc[b_seq, l_seq]                           # (T,)
+    t_ids = jnp.arange(T, dtype=jnp.int32)
+    marked = jnp.where(chip_seq[:, None] == jnp.arange(n_chips)[None, :],
+                       t_ids[:, None], -1)                # (T, C)
+    last_incl = jax.lax.cummax(marked, axis=0)
+    last_before = jnp.concatenate(                        # strictly < t
+        [jnp.full((1, n_chips), -1, last_incl.dtype), last_incl[:-1]], 0)
+
+    pos = jnp.zeros((rows, m_cols), jnp.int32) \
+        .at[b_seq, l_seq].set(t_ids)                      # (rows, M)
+
+    # liveness of producer column pc[l, w] for consumer (b, l): the last op
+    # on the producer's chip strictly before the consumer is the producer
+    cpw = lc[:, pred_cols]                                # (rows, M, W)
+    ppos_mat = pos[:, pred_cols]                          # (rows, M, W)
+    lbp = last_before[pos[:, :, None], cpw]               # (rows, M, W)
+    live = (lbp == ppos_mat) & pred_valid[None, :, :]
+
+    # weight residency: previous op on the consumer's chip ran the same
+    # column for a different micro-batch
+    prev_t = last_before[t_ids, chip_seq]                 # (T,)
+    safe_prev = jnp.maximum(prev_t, 0)
+    elide_t = (prev_t >= 0) & (l_seq[safe_prev] == l_seq) \
+        & (b_seq[safe_prev] != b_seq)
+    elide = jnp.zeros((rows, m_cols), jnp.bool_) \
+        .at[b_seq, l_seq].set(elide_t)
+
+    # traffic masks: live producers on another chip arrive over the NoP
+    # (hop-weighted), dead ones are re-read from DRAM
+    diff_chip = cpw != lc[:, :, None]
+    nop_mask = (live & diff_chip).astype(jnp.float32)
+    hop_mask = nop_mask * hops[cpw, lc[:, :, None]]
+    dram_mask = (pred_valid[None, :, :] & ~live).astype(jnp.float32)
+
+    # write-out elision: every successor consumed the output live
+    consumed = jnp.zeros((rows, m_cols), jnp.int32).at[
+        jnp.arange(rows)[:, None, None],
+        jnp.broadcast_to(pred_cols[None], (rows,) + pred_cols.shape),
+    ].add(live.astype(jnp.int32))
+    write_out = (n_succ[None, :] - consumed > 0) | (n_succ[None, :] == 0)
+
+    # padded predecessor positions per schedule step (sentinel T -> the
+    # zero slot of the end vector, matching the oracle's max(..., 0))
+    ppos = jnp.where(pred_valid[l_seq],                   # (T, W)
+                     ppos_mat[b_seq, l_seq], T)
+
+    return dict(chip_seq=chip_seq, elide=elide, write_out=write_out,
+                nop_mask=nop_mask, hop_mask=hop_mask, dram_mask=dram_mask,
+                b_seq=b_seq, l_seq=l_seq, ppos=ppos)
+
+
+def _batch_pass(struct, lc, pred_cols, dram_hops, flow_of_chip, ws_resident,
+                out_bytes, comp_s, comp_e, weight_b, psum_b, output_b, rr,
+                stream_b, extra_w, dram_bw, nop_bw, n_chips: int):
+    """Costs + timing for one (batch, individual) pair given the
+    individual's structural pass output."""
+    rows, m_cols = lc.shape
+    ws_idx = DATAFLOWS.index("WS")
+
+    ob_w = out_bytes[:, pred_cols]                        # (rows, M, W)
+    nop_in = jnp.sum(struct["nop_mask"] * ob_w, axis=-1)
+    nop_hops_in = jnp.sum(struct["hop_mask"] * ob_w, axis=-1)
+    dram_in = jnp.sum(struct["dram_mask"] * ob_w, axis=-1)
+
+    op_df = flow_of_chip[lc]                              # (rows, M)
+    bi = jnp.arange(rows)[:, None]
+    li = jnp.arange(m_cols)[None, :]
+    g = lambda tab: tab[bi, li, op_df]
+    comp = g(comp_s)
+    cene = g(comp_e)
+    w_b = g(weight_b)
+    ps_b = g(psum_b)
+    o_b = g(output_b)
+    rr_g = g(rr)
+
+    elide_ok = struct["elide"] & (op_df == ws_idx) & ws_resident
+    load_w = jnp.where(elide_ok, 0.0, w_b)
+    w_out = jnp.where(struct["write_out"], o_b, 0.0)
+    dram_bytes = (load_w + dram_in * rr_g + stream_b
+                  + w_out + ps_b + extra_w)
+    t_dram = dram_bytes / dram_bw
+    t_nop = nop_in / nop_bw
+    t_proc = jnp.maximum(comp, jnp.maximum(t_dram, t_nop))
+
+    e_dram = jnp.sum(dram_bytes) * E_DRAM_PJ_PER_BYTE
+    e_nop = jnp.sum(nop_hops_in + dram_bytes * dram_hops[lc]) \
+        * E_NOP_PJ_PER_BYTE_HOP
+    energy_pj = jnp.sum(cene) + e_dram + e_nop
+
+    # ------------------------------------------------ timing recurrence
+    T = struct["chip_seq"].shape[0]
+    tproc_sched = t_proc[struct["b_seq"], struct["l_seq"]]  # (T,)
+
+    def time_step(carry, xs):
+        chip_free, end_sched = carry
+        t, chip, ppos, tp = xs
+        pred_end = jnp.max(end_sched[ppos])
+        start = jnp.maximum(chip_free[chip], pred_end)
+        fin = start + tp
+        return (chip_free.at[chip].set(fin),
+                end_sched.at[t].set(fin)), None
+
+    (chip_free, end_sched), _ = jax.lax.scan(
+        time_step,
+        (jnp.zeros((n_chips,)), jnp.zeros((T + 1,))),
+        (jnp.arange(T, dtype=jnp.int32), struct["chip_seq"], struct["ppos"],
+         tproc_sched),
+        unroll=min(_SCAN_UNROLL, T))
+    return jnp.max(end_sched), energy_pj
+
+
+def _population_pass_impl(
     order_rc,      # (P, T, 2) int32 scheduled (row, col) order
     l2c,           # (P, rows, M) int32
-    pred_mask,     # (M, M) bool — pred_mask[l, p] = p is predecessor of l
     n_succ,        # (M,) int32
+    pred_cols,     # (M, W) int32 padded predecessor columns
+    pred_valid,    # (M, W) bool
     hops,          # (C, C) float32
     dram_hops,     # (C,) float32
     flow_of_chip,  # (C,) int32
     ws_resident,   # (rows, M) bool
-    has_weights,   # (M,) bool
     out_bytes,     # (rows, M) float32
     comp_s,        # (rows, M, D)
     comp_e,        # (rows, M, D)
@@ -57,95 +201,116 @@ def _population_pass(
     nop_bw,        # ()
     n_chips: int,
 ):
-    P, T, _ = order_rc.shape
-    rows, m_cols = out_bytes.shape
-    ws_idx = DATAFLOWS.index("WS")
-    col_ids = jnp.arange(m_cols, dtype=jnp.int32)
+    struct = jax.vmap(
+        lambda o, lc: _structural_pass(o, lc, n_succ, hops, pred_cols,
+                                       pred_valid, n_chips)
+    )(order_rc, l2c)
+    return jax.vmap(
+        lambda s, lc: _batch_pass(s, lc, pred_cols, dram_hops, flow_of_chip,
+                                  ws_resident, out_bytes, comp_s, comp_e,
+                                  weight_b, psum_b, output_b, rr, stream_b,
+                                  extra_w, dram_bw, nop_bw, n_chips)
+    )(struct, l2c)
 
-    def one_individual(order, lc):
-        # ------------------------------------------------ pass A: flags
-        def flags_step(carry, rc):
-            state_row, state_col, remaining = carry
-            b, l = rc[0], rc[1]
-            chip = lc[b, l]
-            # weight residency
-            elide = (state_col[chip] == l) & (state_row[chip] != b)
-            # predecessor liveness across all columns of row b
-            cp = lc[b, :]                                     # (M,)
-            live = (state_row[cp] == b) & (state_col[cp] == col_ids)
-            pmask = pred_mask[l]
-            ob = out_bytes[b, :]
-            nop_b = jnp.sum(jnp.where(pmask & live & (cp != chip), ob, 0.0))
-            nop_h = jnp.sum(jnp.where(pmask & live & (cp != chip),
-                                      ob * hops[cp, chip], 0.0))
-            dram_in = jnp.sum(jnp.where(pmask & ~live, ob, 0.0))
-            dec = (pmask & live).astype(remaining.dtype)
-            remaining = remaining.at[b].add(-dec)
-            state_row = state_row.at[chip].set(b)
-            state_col = state_col.at[chip].set(l)
-            return (state_row, state_col, remaining), (elide, nop_b, nop_h, dram_in)
 
-        init = (jnp.full((n_chips,), -1, jnp.int32),
-                jnp.full((n_chips,), -1, jnp.int32),
-                jnp.tile(n_succ[None, :], (rows, 1)))
-        (_, _, remaining), (elide_t, nop_b_t, nop_h_t, dram_in_t) = jax.lax.scan(
-            flags_step, init, order)
+_population_pass = partial(jax.jit, static_argnames=("n_chips",))(
+    _population_pass_impl)
 
-        write_out = (remaining > 0) | (n_succ[None, :] == 0)
 
-        # scatter per-step flag outputs back to (rows, M)
-        def scatter(vals, dtype=jnp.float32):
-            buf = jnp.zeros((rows, m_cols), dtype)
-            return buf.at[order[:, 0], order[:, 1]].set(vals.astype(dtype))
+def _grouped_population_pass_impl(
+    order_rc,      # (P, T, 2) — shared by every batch of the group
+    l2c,           # (P, rows, M)
+    n_succ, pred_cols, pred_valid, hops, dram_hops, flow_of_chip,
+    ws_resident,   # (B, rows, M)
+    out_bytes,     # (B, rows, M)
+    comp_s, comp_e, weight_b, psum_b, output_b, rr,   # (B, rows, M, D)
+    stream_b, extra_w,                                # (B, rows, M)
+    dram_bw, nop_bw,
+    n_chips: int,
+):
+    # structural pass once per individual — shared across the group's
+    # batches (it depends on the mapping only, not the byte tables)
+    struct = jax.vmap(
+        lambda o, lc: _structural_pass(o, lc, n_succ, hops, pred_cols,
+                                       pred_valid, n_chips)
+    )(order_rc, l2c)
 
-        elide = scatter(elide_t, jnp.bool_)
-        nop_in = scatter(nop_b_t)
-        nop_hops_in = scatter(nop_h_t)
-        dram_in = scatter(dram_in_t)
+    def per_batch(ws_r, ob, cs, ce, wb, pb, o_b, rr_b, sb, ew):
+        return jax.vmap(
+            lambda s, lc: _batch_pass(s, lc, pred_cols, dram_hops,
+                                      flow_of_chip, ws_r, ob, cs, ce, wb,
+                                      pb, o_b, rr_b, sb, ew, dram_bw,
+                                      nop_bw, n_chips)
+        )(struct, l2c)
 
-        # ------------------------------------------------ vectorised costs
-        op_df = flow_of_chip[lc]                              # (rows, M)
-        bi = jnp.arange(rows)[:, None]
-        li = jnp.arange(m_cols)[None, :]
-        g = lambda tab: tab[bi, li, op_df]
-        comp = g(comp_s)
-        cene = g(comp_e)
-        w_b = g(weight_b)
-        ps_b = g(psum_b)
-        o_b = g(output_b)
-        rr_g = g(rr)
+    return jax.vmap(per_batch)(ws_resident, out_bytes, comp_s, comp_e,
+                               weight_b, psum_b, output_b, rr, stream_b,
+                               extra_w)
 
-        elide_ok = elide & (op_df == ws_idx) & ws_resident
-        load_w = jnp.where(elide_ok, 0.0, w_b)
-        w_out = jnp.where(write_out, o_b, 0.0)
-        dram_bytes = (load_w + dram_in * rr_g + stream_b
-                      + w_out + ps_b + extra_w)
-        t_dram = dram_bytes / dram_bw
-        t_nop = nop_in / nop_bw
-        t_proc = jnp.maximum(comp, jnp.maximum(t_dram, t_nop))
 
-        e_dram = jnp.sum(dram_bytes) * E_DRAM_PJ_PER_BYTE
-        e_nop = jnp.sum(nop_hops_in + dram_bytes * dram_hops[lc]) \
-            * E_NOP_PJ_PER_BYTE_HOP
-        energy_pj = jnp.sum(cene) + e_dram + e_nop
+_grouped_population_pass = partial(jax.jit, static_argnames=("n_chips",))(
+    _grouped_population_pass_impl)
 
-        # ------------------------------------------------ pass B: timing
-        def time_step(carry, rc):
-            chip_free, end = carry
-            b, l = rc[0], rc[1]
-            chip = lc[b, l]
-            pred_end = jnp.max(jnp.where(pred_mask[l], end[b], 0.0))
-            start = jnp.maximum(chip_free[chip], pred_end)
-            fin = start + t_proc[b, l]
-            return (chip_free.at[chip].set(fin), end.at[b, l].set(fin)), None
 
-        (chip_free, end), _ = jax.lax.scan(
-            time_step,
-            (jnp.zeros((n_chips,)), jnp.zeros((rows, m_cols))),
-            order)
-        return jnp.max(end), energy_pj
+def jit_cache_sizes() -> dict:
+    """Compile-cache sizes of the two jitted entry points — one entry per
+    distinct (P, T, rows, M, C[, B]) shape across the process lifetime.
+    Used by tests/benchmarks to assert nothing retraces per generation."""
+    return {
+        "population_pass": int(_population_pass._cache_size()),
+        "grouped_population_pass": int(_grouped_population_pass._cache_size()),
+    }
 
-    return jax.vmap(one_individual)(order_rc, l2c)
+
+def _shared_statics(graph: ExecutionGraph, hw: HardwareConfig) -> dict:
+    m_cols = graph.n_cols
+    pm = np.zeros((m_cols, m_cols), dtype=bool)
+    for l, meta in enumerate(graph.layers):
+        if meta.pred_lo >= 0:
+            pm[l, meta.pred_lo:meta.pred_hi] = True
+    n_succ = pm.sum(axis=0).astype(np.int32)
+    widths = [max(0, meta.pred_hi - meta.pred_lo) if meta.pred_lo >= 0 else 0
+              for meta in graph.layers]
+    w = max(widths + [1])
+    pred_cols = np.zeros((m_cols, w), dtype=np.int32)
+    pred_valid = np.zeros((m_cols, w), dtype=bool)
+    for l, meta in enumerate(graph.layers):
+        if meta.pred_lo >= 0:
+            n = meta.pred_hi - meta.pred_lo
+            pred_cols[l, :n] = np.arange(meta.pred_lo, meta.pred_hi)
+            pred_valid[l, :n] = True
+    C = hw.n_chiplets
+    hops = np.zeros((C, C), dtype=np.float32)
+    for a in range(C):
+        for b in range(C):
+            hops[a, b] = hw.hops(a, b)
+    return dict(
+        n_succ=jnp.asarray(n_succ),
+        pred_cols=jnp.asarray(pred_cols),
+        pred_valid=jnp.asarray(pred_valid),
+        hops=jnp.asarray(hops),
+        dram_hops=jnp.asarray(
+            np.array([hw.dram_hops(c) for c in range(C)], np.float32)),
+        flow_of_chip=jnp.asarray(
+            np.array([DATAFLOWS.index(f) for f in hw.layout], np.int32)),
+        dram_bw=jnp.float32(hw.dram_bw),
+        nop_bw=jnp.float32(hw.nop_bw),
+    )
+
+
+def _table_arrays(t: CostTables) -> dict:
+    return dict(
+        ws_resident=t.ws_resident,
+        out_bytes=t.out_act_bytes.astype(np.float32),
+        comp_s=t.comp_seconds.astype(np.float32),
+        comp_e=t.comp_energy_pj.astype(np.float32),
+        weight_b=t.weight_bytes.astype(np.float32),
+        psum_b=t.psum_bytes.astype(np.float32),
+        output_b=t.output_bytes.astype(np.float32),
+        rr=t.input_reread.astype(np.float32),
+        stream_b=t.stream_bytes.astype(np.float32),
+        extra_w=t.extra_write_bytes.astype(np.float32),
+    )
 
 
 @dataclass
@@ -158,50 +323,77 @@ class PopulationEvaluator:
 
     def __post_init__(self):
         g, t, hw = self.graph, self.tables, self.hw
-        rows, m_cols = g.rows, g.n_cols
-        pm = np.zeros((m_cols, m_cols), dtype=bool)
-        for l, meta in enumerate(g.layers):
-            if meta.pred_lo >= 0:
-                pm[l, meta.pred_lo:meta.pred_hi] = True
-        n_succ = pm.sum(axis=0).astype(np.int32)
-        C = hw.n_chiplets
-        hops = np.zeros((C, C), dtype=np.float32)
-        for a in range(C):
-            for b in range(C):
-                hops[a, b] = hw.hops(a, b)
         self._static = dict(
-            pred_mask=jnp.asarray(pm),
-            n_succ=jnp.asarray(n_succ),
-            hops=jnp.asarray(hops),
-            dram_hops=jnp.asarray(
-                np.array([hw.dram_hops(c) for c in range(C)], np.float32)),
-            flow_of_chip=jnp.asarray(
-                np.array([DATAFLOWS.index(f) for f in hw.layout], np.int32)),
-            ws_resident=jnp.asarray(t.ws_resident),
-            has_weights=jnp.asarray(t.has_weights),
-            out_bytes=jnp.asarray(t.out_act_bytes.astype(np.float32)),
-            comp_s=jnp.asarray(t.comp_seconds.astype(np.float32)),
-            comp_e=jnp.asarray(t.comp_energy_pj.astype(np.float32)),
-            weight_b=jnp.asarray(t.weight_bytes.astype(np.float32)),
-            psum_b=jnp.asarray(t.psum_bytes.astype(np.float32)),
-            output_b=jnp.asarray(t.output_bytes.astype(np.float32)),
-            rr=jnp.asarray(t.input_reread.astype(np.float32)),
-            stream_b=jnp.asarray(t.stream_bytes.astype(np.float32)),
-            extra_w=jnp.asarray(t.extra_write_bytes.astype(np.float32)),
-            dram_bw=jnp.float32(hw.dram_bw),
-            nop_bw=jnp.float32(hw.nop_bw),
+            _shared_statics(g, hw),
+            **{k: jnp.asarray(v) for k, v in _table_arrays(t).items()},
         )
-        self._n_chips = C
+        self._n_chips = hw.n_chiplets
+        self._order_cache = ScheduledOrderCache(g.rows, g.n_cols)
 
     def evaluate_population(
-        self, population: Sequence[MappingEncoding]
+        self, population: "Sequence[MappingEncoding]"
     ) -> tuple[np.ndarray, np.ndarray]:
-        """Returns (latency_s, energy_j) arrays over the population."""
-        orders = np.stack([enc.scheduled_order() for enc in population])
-        l2cs = np.stack([enc.layer_to_chip for enc in population])
+        """Returns (latency_s, energy_j) arrays over the population.
+        Accepts a list of encodings or a ``StackedPopulation``."""
+        pop = as_stacked(population)
+        orders = self._order_cache.orders(pop.segmentation)
         lat, en_pj = _population_pass(
-            jnp.asarray(orders), jnp.asarray(l2cs),
+            jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
             n_chips=self._n_chips, **self._static)
         scale = self.graph.scale
+        return (np.asarray(lat, np.float64) * scale,
+                np.asarray(en_pj, np.float64) * 1e-12 * scale)
+
+
+@dataclass
+class GroupPopulationEvaluator:
+    """Evaluates a GA population against ALL structurally-identical batches
+    of a ``search_mapping`` group in one jitted call per generation: the
+    per-batch cost tables are stacked on a leading (B,) axis and vmapped
+    over on device, while the mapping-structural pass runs once per
+    individual. Returns (B, P) latency/energy."""
+
+    graphs: Sequence[ExecutionGraph]
+    tables: Sequence[CostTables]
+    hw: HardwareConfig
+
+    def __post_init__(self):
+        g0 = self.graphs[0]
+        assert all(g.rows == g0.rows and g.n_cols == g0.n_cols
+                   for g in self.graphs), "group batches must share (rows, M)"
+        # the structural pass is shared, so the dependency structure must be
+        # identical too — equal shape alone does not guarantee it
+        preds0 = [(m.pred_lo, m.pred_hi) for m in g0.layers]
+        assert all([(m.pred_lo, m.pred_hi) for m in g.layers] == preds0
+                   for g in self.graphs), \
+            "group batches must share predecessor intervals"
+        per_batch = [_table_arrays(t) for t in self.tables]
+        stacked = {
+            k: jnp.asarray(np.stack([arrs[k] for arrs in per_batch]))
+            for k in per_batch[0]
+        }
+        self._static = dict(
+            _shared_statics(g0, self.hw),
+            **stacked,
+        )
+        self._n_chips = self.hw.n_chiplets
+        self._order_cache = ScheduledOrderCache(g0.rows, g0.n_cols)
+        self._scales = np.array([g.scale for g in self.graphs])
+
+    @property
+    def n_batches(self) -> int:
+        return len(self.graphs)
+
+    def evaluate_population(
+        self, population
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """population (list of encodings or StackedPopulation) ->
+        ((B, P) latency_s, (B, P) energy_j)."""
+        pop = as_stacked(population)
+        orders = self._order_cache.orders(pop.segmentation)
+        lat, en_pj = _grouped_population_pass(
+            jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
+            n_chips=self._n_chips, **self._static)
+        scale = self._scales[:, None]
         return (np.asarray(lat, np.float64) * scale,
                 np.asarray(en_pj, np.float64) * 1e-12 * scale)

@@ -1,0 +1,6 @@
+"""Distributed-execution utilities: sharding rules for the production
+meshes, gradient compression with error feedback, and elastic-mesh helpers.
+
+Kept dependency-light: importing ``repro.dist`` touches no jax device
+state (safe before ``XLA_FLAGS`` is pinned by the dry-run entrypoint).
+"""

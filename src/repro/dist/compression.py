@@ -1,0 +1,47 @@
+"""Error-feedback gradient compression (1-bit-Adam-style, int8 variant).
+
+Gradients are quantised per-leaf to int8 with a symmetric max-abs scale;
+the quantisation error is returned as a residual that the caller feeds back
+into the next step (``roundtrip``), so the compression bias cancels over
+time instead of accumulating.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-30
+
+
+def compress_grads(grads):
+    """tree of float grads -> ({"q": int8 tree, "scale": scalar tree},
+    residual tree). residual == grads - dequantised exactly."""
+    def scale_of(g):
+        return jnp.maximum(jnp.max(jnp.abs(g)).astype(jnp.float32) / 127.0,
+                           _EPS)
+
+    scales = jax.tree.map(scale_of, grads)
+    q = jax.tree.map(
+        lambda g, s: jnp.clip(jnp.round(g.astype(jnp.float32) / s),
+                              -127, 127).astype(jnp.int8),
+        grads, scales)
+    comp = {"q": q, "scale": scales}
+    residual = jax.tree.map(
+        lambda g, d: g.astype(jnp.float32) - d,
+        grads, decompress_grads(comp))
+    return comp, residual
+
+
+def decompress_grads(comp):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        comp["q"], comp["scale"])
+
+
+def roundtrip(grads, residual=None):
+    """One error-feedback step: compress (grads + residual), return the
+    decompressed gradient to apply and the new residual to carry."""
+    if residual is not None:
+        grads = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    comp, new_residual = compress_grads(grads)
+    return decompress_grads(comp), new_residual

@@ -1,0 +1,171 @@
+"""Partition rules for params and KV/state caches on the production meshes.
+
+Mesh axes: ``("pod", "data", "model")`` (multi-pod) or ``("data", "model")``.
+The rules are name + shape driven (Megatron-style tensor parallelism over
+``model``, FSDP/batch over ``(pod, data)``) with divisibility fallbacks:
+
+* column-parallel projections (``wq/wk/wv/wi/in_proj/w_dkv/lm_head``):
+  output dim over ``model``;
+* row-parallel projections (``wo/out_proj``): input dim over ``model``;
+* embeddings: vocab dim over ``model`` (vocab-parallel CE lives in
+  ``training.train_loop.masked_ce``);
+* MoE banks (3-D ``[experts, d_in, d_out]``): experts over ``model`` (EP),
+  first inner dim over ``(pod, data)`` (FSDP);
+* caches: batch over ``(pod, data)``; KV heads over ``model`` when they
+  divide, else sequence-parallel over ``model``; mamba state heads over
+  ``model``; every indivisible dim falls back to unsharded.
+
+Stacked layouts (``blocks_stacked/...`` params, scan-over-layers caches with
+a leading ``[n_steps]`` dim) get a leading ``None`` and the same trailing
+rules.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+_COL_PARALLEL = {"wq", "wk", "wv", "wi", "w_dkv", "w_uk", "w_uv", "in_proj",
+                 "lm_head", "x_proj", "dt_proj"}
+_ROW_PARALLEL = {"wo", "out_proj"}
+
+
+def _axis_sizes(mesh) -> dict:
+    return {name: int(mesh.shape[name]) for name in mesh.axis_names}
+
+
+def _fit(mesh, size: int, axes) -> str | tuple | None:
+    """Largest prefix-complete fit of ``axes`` onto ``size``: axes absent
+    from the mesh are dropped; if the remaining product does not divide the
+    dim the whole entry falls back to ``None`` (no partial sharding)."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    sizes = _axis_sizes(mesh)
+    names = tuple(a for a in axes if a in sizes)
+    if not names:
+        return None
+    total = int(np.prod([sizes[n] for n in names]))
+    if total <= 0 or int(size) % total:
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def _path_parts(name: str) -> list[str]:
+    return [p for p in name.split("/") if p]
+
+
+def param_partition_spec(name: str, shape, mesh) -> P:
+    """Partition spec for one parameter leaf. ``name`` is the '/'-joined
+    tree path (e.g. ``blocks/0/attn/wq/w``)."""
+    parts = _path_parts(name)
+    stacked = any(p.endswith("_stacked") for p in parts)
+    dims = list(shape)
+    lead: list = []
+    if stacked and len(dims) >= 2:
+        lead = [None]
+        dims = dims[1:]
+
+    spec: list = [None] * len(dims)
+    leaf = parts[-1]
+    owner = parts[-2] if len(parts) >= 2 else ""
+
+    if "moe" in parts and len(dims) == 3:
+        # expert bank [E, d_in, d_out]: EP over model, FSDP over (pod, data)
+        spec[0] = _fit(mesh, dims[0], MODEL_AXIS)
+        spec[1] = _fit(mesh, dims[1], BATCH_AXES)
+    elif owner == "embed" or leaf == "e":
+        spec[0] = _fit(mesh, dims[0], MODEL_AXIS)
+    elif len(dims) == 2 and (owner in _COL_PARALLEL or leaf in _COL_PARALLEL):
+        spec[1] = _fit(mesh, dims[1], MODEL_AXIS)
+    elif len(dims) == 2 and (owner in _ROW_PARALLEL or leaf in _ROW_PARALLEL):
+        spec[0] = _fit(mesh, dims[0], MODEL_AXIS)
+    # 1-D leaves (norm scales, biases, a_log, ...) stay replicated
+
+    return P(*(lead + spec))
+
+
+def cache_partition_spec(name: str, shape, mesh) -> P:
+    """Partition spec for one KV/state-cache leaf (keys like ``0/k``,
+    ``0/kv``, ``0/state``, ``0/len``; scan-stacked leaves carry a leading
+    [n_steps] dim)."""
+    leaf = _path_parts(name)[-1]
+    dims = list(shape)
+    lead: list = []
+
+    if leaf == "len":
+        if len(dims) == 2:                       # stacked [steps, B]
+            lead, dims = [None], dims[1:]
+        return P(*(lead + [_fit(mesh, dims[0], BATCH_AXES)]))
+
+    if leaf == "state":
+        if len(dims) == 5:                       # stacked [steps, B, H, N, Pd]
+            lead, dims = [None], dims[1:]
+        spec = [_fit(mesh, dims[0], BATCH_AXES),
+                _fit(mesh, dims[1], MODEL_AXIS), None, None]
+        return P(*(lead + spec))
+
+    # attention caches k / v / kv / *_scale: [B, L, H, D]
+    if len(dims) == 5:
+        lead, dims = [None], dims[1:]
+    if len(dims) != 4:
+        return P(*([None] * len(shape)))
+    batch = _fit(mesh, dims[0], BATCH_AXES)
+    heads = _fit(mesh, dims[2], MODEL_AXIS)
+    if heads is not None:
+        spec = [batch, None, heads, None]
+    else:                                        # sequence-parallel fallback
+        spec = [batch, _fit(mesh, dims[1], MODEL_AXIS), None, None]
+    return P(*(lead + spec))
+
+
+# ---------------------------------------------------------------------------
+# tree-level helpers
+# ---------------------------------------------------------------------------
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _map_with_name(fn, tree):
+    import jax
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn("/".join(_key_str(k) for k in path), leaf), tree)
+
+
+def make_param_shardings(mesh, params):
+    """NamedSharding tree matching ``params`` (works on ShapeDtypeStructs)."""
+    return _map_with_name(
+        lambda name, leaf: NamedSharding(
+            mesh, param_partition_spec(name, leaf.shape, mesh)), params)
+
+
+def make_cache_shardings(mesh, cache):
+    return _map_with_name(
+        lambda name, leaf: NamedSharding(
+            mesh, cache_partition_spec(name, leaf.shape, mesh)), cache)
+
+
+def token_sharding(mesh, global_batch: int) -> NamedSharding:
+    return NamedSharding(mesh, P(_fit(mesh, global_batch, BATCH_AXES), None))
+
+
+def constrain(x, spec_axes, mesh):
+    """Activation sharding constraint; identity when ``mesh`` is None.
+    Axes absent from the mesh or indivisible dims are dropped per-dim."""
+    if mesh is None:
+        return x
+    import jax
+
+    spec = P(*[_fit(mesh, d, a) if a else None
+               for a, d in zip(spec_axes, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -267,6 +267,8 @@ def run_cell(arch: ArchConfig, shape: Shape, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax <= 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     coll = collective_bytes(hlo_text)
     coll_hist = collective_histogram(hlo_text)

@@ -336,10 +336,16 @@ def _xla_decode(q, k_cache, v_cache, lengths):
     return o.reshape(b, hq, d)
 
 
-def attention_extend(p, x, cfg, rope, cache, impl="xla"):
+def attention_extend(p, x, cfg, rope, cache, impl="xla", length=None):
     """Multi-token cache extension (chunked prefill): the chunk's queries
-    attend over the existing cache plus themselves. x: [B, L, d]."""
+    attend over the existing cache plus themselves. x: [B, L, d].
+
+    ``length`` ([B], optional): true chunk length when x is right-padded —
+    only the cache ``len`` advance uses it (pad KV entries land beyond the
+    advanced length, are never read by the causal mask, and are overwritten
+    by the next chunk)."""
     b, l, _ = x.shape
+    adv = l if length is None else length
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     cos, sin = rope
     off = cache["len"]                                   # [B]
@@ -358,7 +364,7 @@ def attention_extend(p, x, cfg, rope, cache, impl="xla"):
         k_rope = _rope_heads(k_rope[:, :, None, :], positions, cos, sin)
         lat = jnp.concatenate([c, k_rope[:, :, 0, :]], -1)
         kv = _scatter_span(cache["kv"], lat[:, :, None, :], off)
-        cache = {"kv": kv, "len": off + l}
+        cache = {"kv": kv, "len": off + adv}
         o = _xla_extend(q_eff.transpose(0, 2, 1, 3), kv, kv, off, l)
         y = jnp.einsum("bhlr,rhd->blhd", o[..., :r].transpose(0, 1, 2, 3),
                        p["w_uv"]["w"].reshape(r, hq, hd)) if False else             jnp.einsum("bhlr,rhd->bhld", o[..., :r],
@@ -373,7 +379,7 @@ def attention_extend(p, x, cfg, rope, cache, impl="xla"):
     k = _rope_heads(k, positions, cos, sin)
     kc = _scatter_span(cache["k"], k, off)
     vc = _scatter_span(cache["v"], v, off)
-    cache = {"k": kc, "v": vc, "len": off + l}
+    cache = {"k": kc, "v": vc, "len": off + adv}
     o = _xla_extend(q, kc, vc, off, l)                   # [B, Hq, L, hd]
     y = o.transpose(0, 2, 1, 3).reshape(b, l, -1)
     return dense(p["wo"], y), cache

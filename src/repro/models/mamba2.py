@@ -119,19 +119,27 @@ def mamba_prefill(p, x, cfg, cache, impl="xla"):
     return dense(p["out_proj"], y), cache
 
 
-def mamba_extend(p, x, cfg, cache, impl="xla"):
-    """Multi-token extension from an existing recurrent state."""
+def mamba_extend(p, x, cfg, cache, impl="xla", length=None):
+    """Multi-token extension from an existing recurrent state.
+
+    ``length`` ([B], optional): true chunk length when x is right-padded.
+    Pad positions get dt = 0, which makes them exact identities on the
+    recurrent state (decay exp(a*0) = 1, update weight dt = 0)."""
     bsz, l, _ = x.shape
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
     pdim = di // h
     z, xs, b_mat, c_mat, dt = _split_proj(p, x, cfg)
+    if length is not None:
+        valid = jnp.arange(l)[None, :] < length[:, None]
+        dt = dt * valid[..., None]
     xh = xs.reshape(bsz, l, h, pdim)
     a = -jnp.exp(p["a_log"])
     y, state = _ssd_xla(xh, dt, a, b_mat, c_mat,
                         cache["state"].astype(jnp.float32))
     y = y.reshape(bsz, l, di).astype(x.dtype)
     y = rmsnorm(p["norm"], y * jax.nn.silu(z))
-    cache = {"state": state, "len": cache["len"] + l}
+    adv = l if length is None else length
+    cache = {"state": state, "len": cache["len"] + adv}
     return dense(p["out_proj"], y), cache
 
 

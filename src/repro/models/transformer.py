@@ -323,27 +323,37 @@ def prefill(params, cfg: ModelConfig, tokens, cache, enc_out=None,
 
 
 def extend(params, cfg: ModelConfig, tokens, cache, enc_out=None,
-           impl="xla"):
+           impl="xla", length=None):
     """Chunked-prefill continuation: process a multi-token chunk against the
-    existing caches. tokens: [B, L] -> (last logits [B, vocab], cache)."""
+    existing caches. tokens: [B, L] -> (last logits [B, vocab], cache).
+
+    ``length`` (traced [B] or scalar, optional) marks the true chunk length
+    when ``tokens`` is right-padded to a bucket size: pad positions neither
+    advance the caches (attention ``len`` / mamba state) nor pick the output
+    logit, so the serving engine can jit one kernel per bucket instead of
+    one per exact chunk length."""
     from .attention import attention_extend
     from .mamba2 import mamba_extend
 
     x = embed(params["embed"], tokens)
     b, l, _ = x.shape
+    adv = None if length is None else \
+        jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
     rope = rope_freqs(cfg.head_dim, cfg.max_seq, cfg.rope_theta)
     new_cache = []
     for i, blk in enumerate(params["blocks"]):
         h = _norm(cfg, blk["norm1"], x)
         if cfg.mixer_kind(i) == "attn":
             h, c = attention_extend(blk["attn"], h, cfg, rope, cache[i],
-                                    impl=impl)
+                                    impl=impl, length=adv)
         else:
-            h, c = mamba_extend(blk["mamba"], h, cfg, cache[i], impl=impl)
+            h, c = mamba_extend(blk["mamba"], h, cfg, cache[i], impl=impl,
+                                length=adv)
         new_cache.append(c)
         x = x + h
         if enc_out is not None and "cross" in blk:
-            pos = c["len"][:, None] - l + jnp.arange(l)[None, :]
+            start = c["len"] - (l if adv is None else adv)
+            pos = start[:, None] + jnp.arange(l)[None, :]
             h = _norm(cfg, blk["norm_x"], x)
             h = _cross_attention(blk["cross"], h, enc_out, cfg, pos, None,
                                  rope, impl)
@@ -354,7 +364,12 @@ def extend(params, cfg: ModelConfig, tokens, cache, enc_out=None,
                  else _ffn_apply(blk["ffn"], cfg, h))
             x = x + h
     x = _norm(cfg, params["final_norm"], x)
-    return _logits(params, cfg, x[:, -1]), new_cache
+    if adv is None:
+        last = x[:, -1]
+    else:
+        idx = jnp.broadcast_to((adv - 1)[:, None, None], (b, 1, x.shape[-1]))
+        last = jnp.take_along_axis(x, idx, axis=1)[:, 0]
+    return _logits(params, cfg, last), new_cache
 
 
 def _mask_cache(old, new, active):

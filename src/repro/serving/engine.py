@@ -49,17 +49,21 @@ class ServingEngine:
             return jnp.argmax(logits, -1), cache
 
         self._decode = jax.jit(_decode)
-        self._extend = jax.jit(
-            partial(self._extend_impl),
-            static_argnames=("chunk_len",))
+        # chunk lengths are bucketed to powers of two (padding masked out by
+        # `length`) and the slot rides as a traced scalar, so the jit cache
+        # holds one entry per bucket size — not one per (slot, chunk length)
+        self._extend = jax.jit(partial(self._extend_impl))
 
-    def _extend_impl(self, params, tokens, cache, slot, chunk_len):
-        """Run a chunk for one slot: gather row -> extend -> scatter back."""
+    def _extend_impl(self, params, tokens, cache, slot, length):
+        """Run a chunk for one slot: gather row -> extend -> scatter back.
+        ``tokens`` is padded to its bucket; ``slot``/``length`` are traced
+        scalars."""
         row = jax.tree.map(
             lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, 0), cache)
         logits, row = extend(self.params, self.cfg, tokens[None, :], row,
                              enc_out=None if self.enc_out is None
-                             else self.enc_out[:1], impl=self.impl)
+                             else self.enc_out[:1], impl=self.impl,
+                             length=length)
 
         def put(c, r):
             starts = (slot,) + (0,) * (c.ndim - 1)
@@ -67,6 +71,11 @@ class ServingEngine:
 
         cache = jax.tree.map(put, cache, row)
         return jnp.argmax(logits, -1)[0], cache
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Smallest power of two >= n."""
+        return 1 << max(0, n - 1).bit_length()
 
     def run(self, requests: list[ServeRequest], scheduler: Scheduler,
             max_iters: int = 10_000):
@@ -86,14 +95,16 @@ class ServingEngine:
                         continue
                     req.slot = self.free.pop()
                     self._reset_slot(req.slot)
-                chunk = jnp.asarray(
-                    req.prompt[req.prefilled: req.prefilled + chunk_len],
-                    jnp.int32)
+                chunk = req.prompt[req.prefilled: req.prefilled + chunk_len]
+                n = len(chunk)
+                padded = np.zeros((self._bucket(n),), np.int32)
+                padded[:n] = chunk
                 tok, self.cache = self._extend(
-                    self.params, chunk, self.cache, req.slot,
-                    chunk_len=int(chunk.shape[0]))
-                req.prefilled += int(chunk.shape[0])
-                n_prefill_tok += int(chunk.shape[0])
+                    self.params, jnp.asarray(padded), self.cache,
+                    jnp.asarray(req.slot, jnp.int32),
+                    jnp.asarray(n, jnp.int32))
+                req.prefilled += n
+                n_prefill_tok += n
                 if req.prefill_done:
                     req.generated.append(int(tok))
                     req.first_token_iter = it

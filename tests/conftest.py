@@ -4,3 +4,92 @@ import sys
 # keep smoke tests on 1 device — only the dry-run uses 512 fake devices
 os.environ.pop("XLA_FLAGS", None)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# ---------------------------------------------------------------------------
+# Offline hypothesis shim
+#
+# The CI container has no network access and `hypothesis` is not baked into
+# the image. Rather than skipping every property-test module, install a
+# minimal drop-in that covers the subset of the API these tests use
+# (`given` over keyword strategies, `settings(max_examples, deadline)`,
+# `strategies.integers/floats/sampled_from`). Examples are drawn from a
+# deterministic per-test RNG so failures are reproducible. When the real
+# hypothesis is importable it is used untouched.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+
+    import types
+    import zlib
+
+    import numpy as _np
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(min_value + (max_value - min_value) * rng.random()))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def _given(*args, **kwargs):
+        assert not args, "shim supports keyword strategies only"
+
+        def deco(fn):
+            # no functools.wraps: pytest would follow __wrapped__ and treat
+            # the strategy parameters as fixtures
+            def wrapper():
+                n = getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = _np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in kwargs.items()}
+                    fn(**drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+            return wrapper
+
+        return deco
+
+    def _settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            # applied below @given (decorator order in the tests): stash on
+            # the inner test; applied above @given: reach through the wrapper.
+            target = getattr(getattr(fn, "hypothesis", None), "inner_test", fn)
+            target._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__is_repro_shim__ = True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -97,3 +97,58 @@ def test_int8_kv_cache_quantization(monkeypatch):
     df, cf = decode_step(PARAMS, CFG, jnp.argmax(lf, -1), cf)
     assert float(jnp.max(jnp.abs(d8 - df))) < 0.5
     assert bool((jnp.argmax(d8, -1) == jnp.argmax(df, -1)).all())
+
+
+def test_extend_length_masking_matches_unpadded():
+    """Padded chunk + traced length == unpadded chunk (attention arch)."""
+    B = 1
+    toks = jax.random.randint(KEY, (B, 13), 0, CFG.vocab)
+    c1 = init_cache(CFG, B, 64, dtype=jnp.float32)
+    l1, c1 = extend(PARAMS, CFG, toks, c1)
+    pad = jnp.concatenate([toks, jnp.zeros((B, 3), jnp.int32)], axis=1)
+    c2 = init_cache(CFG, B, 64, dtype=jnp.float32)
+    l2, c2 = extend(PARAMS, CFG, pad, c2, length=jnp.asarray(13, jnp.int32))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=1e-4, rtol=1e-4)
+    assert int(c2[0]["len"].max()) == 13
+    # continuing from the padded-chunk cache is seamless
+    more = jax.random.randint(jax.random.PRNGKey(9), (B, 5), 0, CFG.vocab)
+    m1, _ = extend(PARAMS, CFG, more, c1)
+    m2, _ = extend(PARAMS, CFG, more, c2)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_extend_length_masking_matches_unpadded_mamba():
+    """dt-masked pads are exact identities on the recurrent state."""
+    cfg = all_archs()["mamba2-2.7b"].reduced()
+    params = init_model(KEY, cfg)
+    B = 1
+    toks = jax.random.randint(KEY, (B, 11), 0, cfg.vocab)
+    c1 = init_cache(cfg, B, 64, dtype=jnp.float32)
+    l1, c1 = extend(params, cfg, toks, c1)
+    pad = jnp.concatenate([toks, jnp.zeros((B, 5), jnp.int32)], axis=1)
+    c2 = init_cache(cfg, B, 64, dtype=jnp.float32)
+    l2, c2 = extend(params, cfg, pad, c2, length=jnp.asarray(11, jnp.int32))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1[0]["state"]),
+                               np.asarray(c2[0]["state"]),
+                               atol=1e-4, rtol=1e-4)
+    assert int(c2[0]["len"].max()) == 11
+
+
+def test_chunked_prefill_compiles_once_per_bucket():
+    """The recompile trap: ragged chunk lengths and rotating slots must not
+    retrace — at most one jit entry per power-of-two bucket."""
+    rng = np.random.default_rng(4)
+    eng = ServingEngine(PARAMS, CFG, max_batch=3, max_len=64)
+    # prompt lengths chosen to produce many distinct (slot, chunk) pairs
+    reqs = [ServeRequest(i, rng.integers(0, CFG.vocab,
+                                         size=7 + 3 * i).tolist(), 3)
+            for i in range(6)]
+    fin, _ = eng.run(reqs, ChunkedPrefillScheduler(chunk=8))
+    assert len(fin) == 6
+    n_buckets = len({ServingEngine._bucket(n)
+                     for n in range(1, 9)})          # chunks are <= 8 long
+    assert eng._extend._cache_size() <= n_buckets
