@@ -1,7 +1,5 @@
 """Paper Fig. 11 ablation: GA vs random mapping search, BO vs random
 hardware sampling, SCAR-style greedy mapping — equal evaluation budgets."""
-import numpy as np
-
 from .common import Timer, emit, ga_config
 
 
@@ -14,18 +12,17 @@ def run():
     from repro.core.ga import ga_search, random_search
     from repro.core.hardware import make_hardware
     from repro.core.jax_evaluator import PopulationEvaluator
-    from repro.core.traces import GOVREPORT
     from repro.configs import all_archs
+    from repro.core.streams import mixed_serving_stream
     from repro.core.workload import build_execution_graph
-
-    from repro.core.traces import chunked_prefill_strategy
+    from repro.serving.scheduler import ChunkedPrefillScheduler
 
     spec = all_archs()["gpt3-7b"].llm_spec()
     # mixed chunked-prefill + decode batch on 16 heterogeneous chiplets:
     # the landscape where placement/pipelining actually matters
-    wl = chunked_prefill_strategy(4096, 600, 24, 2, chunk=2048)
-    sc = Scenario("gov-cp", spec, target_tops=512, phase="workload",
-                  workload=wl, n_blocks=1)
+    sc = Scenario("gov-cp", spec, target_tops=512,
+                  stream=mixed_serving_stream(4096, 600, 24, 2),
+                  scheduler=ChunkedPrefillScheduler(chunk=2048), n_blocks=1)
     hw = make_hardware(512, "L", tensor_parallel=8, micro_batch_decode=8)
     hw = hw.replace(layout=tuple(["WS", "OS"] * (hw.n_chiplets // 2)))
     batch = sc.batches(hw)[0]

@@ -3,8 +3,11 @@ structure (per-individual Python ``scheduled_order`` + one jitted call per
 batch per generation + per-individual objects through the GA operators).
 
 Reports JSON: steady-state GA evaluations/sec, end-to-end ``co_explore``
-wall-clock, best-score parity, and the jit compile-cache sizes (must stay
-at one entry per (rows, M, C) shape).
+wall-clock, best-score parity, the jit compile-cache sizes (must stay
+at one entry per (rows, M, C) shape), and a stream-first scenario case
+(Poisson arrivals + chunked-prefill scheduler) tracking that the
+``RequestStream`` rollout adds no measurable overhead to the batched GA
+inner loop.
 
 Scenario: ``llama3.2-3b`` prefill on the ShareGPT trace (paper §VI-A).
 
@@ -131,17 +134,102 @@ def bench_ga_parity(graphs, tables, hw, ga_cfg):
     }
 
 
+def bench_stream_scenario(ga_cfg, n_gens: int):
+    """Stream-first scenario: Poisson arrivals rolled out under the
+    chunked-prefill scheduler. Reports the rollout cost next to the GA
+    generation cost — the rollout is per-scenario (cached, hardware-
+    independent), so it must be negligible against the batched GA inner
+    loop it feeds."""
+    import numpy as np
+    from repro.configs import all_archs
+    from repro.core.compass import Scenario, hardware_objective
+    from repro.core.ga import ga_search
+    from repro.core.bo import random_point
+    from repro.core.compass import _make_population_eval
+    from repro.core.evaluator import CostTables
+    from repro.core.hardware import make_hardware
+    from repro.core.streams import RequestStream, rollout
+    from repro.core.traces import SHAREGPT
+    from repro.core.workload import build_execution_graph
+    from repro.serving.scheduler import ChunkedPrefillScheduler
+
+    spec = all_archs()["llama3.2-3b"].llm_spec()
+    stream = RequestStream("sharegpt-poisson", trace=SHAREGPT, rate=0.5,
+                           n_requests=8, max_new_tokens_cap=8, seed=0)
+    sched = ChunkedPrefillScheduler(chunk=512)
+
+    t0 = time.perf_counter()
+    n_roll = 20
+    for _ in range(n_roll):
+        ro = rollout(stream, sched, max_iters=64)
+    t_roll = (time.perf_counter() - t0) / n_roll
+
+    hw = make_hardware(512, "L", tensor_parallel=8)
+    hw = hw.replace(layout=tuple(["WS", "OS"] * (hw.n_chiplets // 2)))
+    graphs = [build_execution_graph(spec, b, hw.micro_batch_decode,
+                                    tp=hw.tensor_parallel, n_blocks=4)
+              for b in ro.batches]
+    tables = [CostTables.build(g, hw) for g in graphs]
+    # largest structure group drives the GA cost
+    groups = {}
+    for i, g in enumerate(graphs):
+        groups.setdefault((g.rows, g.n_cols), []).append(i)
+    idxs = max(groups.values(), key=len)
+    group_eval = _make_population_eval([graphs[i] for i in idxs],
+                                       [tables[i] for i in idxs], hw, None)
+
+    def eval_fn(pop):
+        lat, en = group_eval(pop)
+        return np.asarray(lat * en).mean(axis=0)
+
+    eval_fn.accepts_stacked = True
+    rows, m_cols = graphs[idxs[0]].rows, graphs[idxs[0]].n_cols
+    ga_search(eval_fn, rows, m_cols, hw.n_chiplets,
+              ga_cfg.__class__(population=ga_cfg.population, generations=1))
+    t0 = time.perf_counter()
+    res = ga_search(eval_fn, rows, m_cols, hw.n_chiplets,
+                    ga_cfg.__class__(population=ga_cfg.population,
+                                     generations=n_gens))
+    t_gen = (time.perf_counter() - t0) / (n_gens + 1)
+
+    # end-to-end: one hardware point with an SLO-aware objective
+    sc = Scenario("llama3_2_3b_stream", spec, target_tops=512, stream=stream,
+                  scheduler=sched, objective="ttft_p99", n_blocks=4,
+                  max_stream_iters=64)
+    t0 = time.perf_counter()
+    score, _ = hardware_objective(
+        sc, random_point(np.random.default_rng(0), 512),
+        ga_cfg.__class__(population=ga_cfg.population,
+                         generations=max(2, n_gens // 4)))
+    t_hw = time.perf_counter() - t0
+    return {
+        "scheduler": "chunked_prefill",
+        "arrival": "poisson(rate=0.5)",
+        "rollout_batches": len(ro.batches),
+        "largest_group_batches": len(idxs),
+        "rollout_ms": round(t_roll * 1e3, 3),
+        "ga_generation_ms": round(t_gen * 1e3, 2),
+        "rollout_over_ga_generation": round(t_roll / t_gen, 4),
+        "ga_best_edp": res.best_score,
+        "ttft_p99_score_s": score,
+        "hardware_objective_wall_s": round(t_hw, 2),
+    }
+
+
 def bench_co_explore(ga_cfg):
     import numpy as np  # noqa: F401
     from repro.configs import all_archs
     from repro.core.compass import Scenario, co_explore
     from repro.core.jax_evaluator import jit_cache_sizes
-    from repro.core.traces import SHAREGPT
+    from repro.core.streams import RequestStream
+    from repro.core.traces import SHAREGPT, sample_batches
 
     spec = all_archs()["llama3.2-3b"].llm_spec()
-    scenario = Scenario("llama3_2_3b_prefill", spec, target_tops=512,
-                        phase="prefill", trace=SHAREGPT, batch_size=8,
-                        n_batches=3, n_blocks=4)
+    scenario = Scenario(
+        "llama3_2_3b_prefill", spec, target_tops=512,
+        stream=RequestStream.fixed_batches(
+            sample_batches(SHAREGPT, "prefill", 8, 3, seed=0)),
+        n_blocks=4)
     iters, init = (24, 8) if FULL else (4, 3)
     t0 = time.perf_counter()
     res = co_explore(scenario, bo_iters=iters, bo_init=init,
@@ -176,6 +264,8 @@ def run(out_path: str | None = None):
             n_gens=20 if not FULL else 50),
         "ga_parity": bench_ga_parity(graphs, tables, hw, ga_cfg),
         "co_explore": bench_co_explore(ga_cfg),
+        "stream_scenario": bench_stream_scenario(
+            ga_cfg, n_gens=12 if not FULL else 50),
     }
     text = json.dumps(rec, indent=2)
     print(text)

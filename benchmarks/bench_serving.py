@@ -6,23 +6,24 @@ from .common import Timer, bo_budget, emit, ga_config
 
 def run():
     from repro.core.compass import Scenario, co_explore, hardware_objective
-    from repro.core.traces import chunked_prefill_strategy, orca_strategy, \
-        vllm_strategy
+    from repro.core.streams import mixed_serving_stream
     from repro.configs import all_archs
     from repro.core.bo import HardwarePoint
     from repro.core.hardware import DATAFLOWS
+    from repro.serving.scheduler import ChunkedPrefillScheduler
 
     spec = all_archs()["gpt3-7b"].llm_spec()
-    # GovReport-512T scaled down: 1 prefill (long input) + decode groups
-    mk = dict(prefill_len=4096, decode_ctx=600, decode_bs=32,
-              n_decode_batches=3)
+    # GovReport-512T scaled down: 1 prefill (long input) + warm decode pool,
+    # rolled out under each real scheduler policy
+    stream = mixed_serving_stream(prefill_len=4096, decode_ctx=600,
+                                  decode_bs=32, n_decode_batches=3)
     iters, init = bo_budget()
     results = {}
-    for name, strat in [("vllm", vllm_strategy), ("orca", orca_strategy),
-                        ("chunked_prefill", chunked_prefill_strategy)]:
-        wl = strat(**mk)
-        sc = Scenario(f"gov-{name}", spec, target_tops=512, phase="workload",
-                      workload=wl, n_blocks=1)
+    for name, sched in [("vllm", "vllm"), ("orca", "orca"),
+                        ("chunked_prefill",
+                         ChunkedPrefillScheduler(chunk=2048))]:
+        sc = Scenario(f"gov-{name}", spec, target_tops=512, stream=stream,
+                      scheduler=sched, n_blocks=1)
         with Timer() as t:
             res = co_explore(sc, bo_iters=iters, bo_init=init,
                              ga_config=ga_config(), seed=0)
@@ -38,8 +39,8 @@ def run():
 
     # Fig. 10b: homogenise the chunked-prefill winner
     best = results["chunked_prefill"]
-    sc = Scenario("gov-cp-fixed", spec, target_tops=512, phase="workload",
-                  workload=chunked_prefill_strategy(**mk), n_blocks=1)
+    sc = Scenario("gov-cp-fixed", spec, target_tops=512, stream=stream,
+                  scheduler=ChunkedPrefillScheduler(chunk=2048), n_blocks=1)
     edps = {}
     for tag, layout in [("hetero", best.point.layout),
                         ("all_WS", tuple([DATAFLOWS.index("WS")]

@@ -12,8 +12,7 @@ def gemm_edp(m, k, n, flow, spec, reuse_passes=1):
     from repro.core.dataflow import gemm_cost
     from repro.core.hardware import (
         E_DRAM_PJ_PER_BYTE,
-        FREQ_HZ,
-    )
+        )
 
     c = gemm_cost(m, k, n, spec, flow)
     w = c.weight_bytes

@@ -25,7 +25,7 @@ def main():
     args = ap.parse_args()
 
     from repro.configs import all_archs
-    from repro.core.compass import Scenario, co_explore
+    from repro.core import RequestStream, Scenario, explore
     from repro.core.ga import GAConfig
     from repro.core.traces import SHAREGPT
     from repro.models import init_model
@@ -33,13 +33,17 @@ def main():
                                summarize)
 
     arch = all_archs()[args.arch]
-    sc = Scenario(f"{args.arch}-decode", arch.llm_spec(), target_tops=64,
-                  phase="decode", trace=SHAREGPT, batch_size=16, n_batches=2,
-                  n_blocks=1, seed=args.seed)
-    print("[1/3] DSE on the serving trace...")
-    res = co_explore(sc, bo_iters=3, bo_init=3,
-                     ga_config=GAConfig(population=12, generations=5),
-                     seed=args.seed)
+    # search under the SAME scheduler policy the engine below will run
+    stream = RequestStream(f"{args.arch}-stream", trace=SHAREGPT, rate=2.0,
+                           n_requests=16, warm_fraction=0.8,
+                           max_new_tokens_cap=4, seed=args.seed)
+    sc = Scenario(f"{args.arch}-serve", arch.llm_spec(), target_tops=64,
+                  stream=stream, scheduler="orca", n_blocks=1,
+                  max_stream_iters=24, seed=args.seed)
+    print("[1/3] DSE on the serving stream (orca continuous batching)...")
+    res = explore(sc, bo_iters=3, bo_init=3,
+                  ga_config=GAConfig(population=12, generations=5),
+                  seed=args.seed)
     hw = res.hardware
     print(f"    searched: micro_batch={hw.micro_batch_decode} "
           f"tp={hw.tensor_parallel} spec={hw.spec_name} "

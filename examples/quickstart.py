@@ -10,8 +10,6 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-
 
 def main():
     ap = argparse.ArgumentParser()
@@ -20,7 +18,7 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    from repro.core.compass import Scenario, co_explore
+    from repro.core import RequestStream, Scenario, explore
     from repro.core.evaluator import evaluate
     from repro.core.ga import GAConfig
     from repro.core.traces import SHAREGPT
@@ -28,13 +26,18 @@ def main():
 
     spec = LLMSpec("demo-1b", d_model=2048, n_heads=16, n_kv_heads=16,
                    head_dim=128, d_ff=8192, vocab=32000, n_layers=16)
-    sc = Scenario("sharegpt-decode-64T", spec, target_tops=64, phase="decode",
-                  trace=SHAREGPT, batch_size=16, n_batches=2, n_blocks=1,
-                  seed=args.seed)
+    # stream-first scenario: ShareGPT lengths, Poisson arrivals, a warm
+    # decode pool, rolled out under the Orca continuous-batching policy
+    stream = RequestStream("sharegpt", trace=SHAREGPT, rate=2.0,
+                           n_requests=16, warm_fraction=0.75,
+                           max_new_tokens_cap=4, seed=args.seed)
+    sc = Scenario("sharegpt-serve-64T", spec, target_tops=64, stream=stream,
+                  scheduler="orca", objective="edp_mc", n_blocks=1,
+                  max_stream_iters=24, seed=args.seed)
     print("co-exploring mapping x hardware (reduced budget)...")
-    res = co_explore(sc, bo_iters=args.bo_iters, bo_init=3,
-                     ga_config=GAConfig(population=16, generations=8),
-                     seed=args.seed)
+    res = explore(sc, bo_iters=args.bo_iters, bo_init=3,
+                  ga_config=GAConfig(population=16, generations=8),
+                  seed=args.seed)
     hw = res.hardware
     ws = sum(1 for x in hw.layout if x == "WS")
     print(f"\nbest hardware: spec={hw.spec_name} grid={hw.grid} "
@@ -48,7 +51,7 @@ def main():
 
     if args.timeline:
         batch = sc.batches(hw)[0]
-        g = build_execution_graph(spec, batch, hw.micro_batch_decode,
+        g = build_execution_graph(spec, batch, sc.micro_batch(hw, batch),
                                   tp=hw.tensor_parallel, n_blocks=1)
         enc = res.mapping.encodings[(g.rows, g.n_cols)]
         r = evaluate(g, enc, hw)

@@ -9,7 +9,7 @@ DESIGN.md §8).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from ..core.workload import LLMSpec, MoESpec
 from ..models.transformer import ModelConfig, MoECfg

@@ -1,3 +1,42 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Compass DSE core: the stream-first scenario API plus the three engines
+(BO hardware sampling, GA mapping generation, analytical evaluation).
+
+Typical usage::
+
+    from repro.core import (Scenario, RequestStream, explore)
+    from repro.core.traces import SHAREGPT
+
+    sc = Scenario("mix", spec, target_tops=512,
+                  stream=RequestStream("sharegpt", trace=SHAREGPT, rate=0.5),
+                  scheduler="chunked_prefill", objective="ttft_p99")
+    result = explore(sc)
+"""
+from .compass import (  # noqa: F401
+    CompassResult,
+    MappingSearchOutput,
+    Scenario,
+    co_explore,
+    explore,
+    hardware_objective,
+    scenario_score,
+    search_mapping,
+)
+from .objectives import (  # noqa: F401
+    EDP,
+    EDPxMC,
+    Energy,
+    GoodputUnderSLO,
+    Latency,
+    Objective,
+    TPOTPercentile,
+    TTFTPercentile,
+    get_objective,
+)
+from .streams import (  # noqa: F401
+    RequestStream,
+    RequestTimings,
+    StreamRequest,
+    StreamRollout,
+    mixed_serving_stream,
+    rollout,
+)

@@ -22,17 +22,17 @@ import numpy as np
 
 from .bo import SYS_CANDIDATES, HardwarePoint, random_point
 from .compass import (
-    MappingSearchOutput,
     Scenario,
     _make_population_eval,
-    _objective_value,
+    scenario_score,
 )
 from .encoding import MappingEncoding, pipeline_parallel
 from .evaluator import CostTables, evaluate
-from .ga import GAConfig, ga_search, mutate, simulated_annealing_search
+from .ga import GAConfig, ga_search, simulated_annealing_search
 from .hardware import DATAFLOWS, HardwareConfig, monetary_cost
+from .objectives import Objective
 from .traces import fixed_length_batch
-from .workload import DECODE, PREFILL, build_execution_graph
+from .workload import PREFILL, build_execution_graph
 
 
 @dataclass
@@ -53,9 +53,12 @@ class BaselineResult:
 
 def _evaluate_on_test(scenario: Scenario, hw: HardwareConfig,
                       encodings: dict, default_mb: int | None = None):
-    """Evaluate found (hw, mapping) on the scenario's real test batches."""
+    """Evaluate found (hw, mapping) on the scenario's real test batches.
+    Returns totals plus the per-iteration latencies SLO-aware objectives
+    need to price the scenario's rollout."""
     batches = scenario.batches(hw)
     lat = en = 0.0
+    batch_lat = []
     for batch in batches:
         mb = default_mb if default_mb is not None else scenario.micro_batch(hw, batch)
         g = build_execution_graph(scenario.spec, batch, mb,
@@ -67,7 +70,8 @@ def _evaluate_on_test(scenario: Scenario, hw: HardwareConfig,
         r = evaluate(g, enc, hw)
         lat += r.latency_s
         en += r.energy_j
-    return lat, en
+        batch_lat.append(r.latency_s)
+    return lat, en, batch_lat
 
 
 # --------------------------------------------------------------------------
@@ -78,7 +82,7 @@ def _evaluate_on_test(scenario: Scenario, hw: HardwareConfig,
 def gemini_style_search(
     scenario: Scenario,
     sa_iters: int = 200,
-    objective: str = "edp_mc",
+    objective: Objective | str = "edp_mc",
     grid_subsample: int = 2,
     seed: int = 0,
 ) -> BaselineResult:
@@ -119,10 +123,11 @@ def gemini_style_search(
 
         sa = simulated_annealing_search(eval_fn, g.rows, g.n_cols,
                                         hw.n_chiplets, iters=sa_iters, seed=seed)
-        lat, en = _evaluate_on_test(scenario, hw,
-                                    {(g.rows, g.n_cols): sa.best}, default_mb=mb)
+        lat, en, b_lat = _evaluate_on_test(scenario, hw,
+                                           {(g.rows, g.n_cols): sa.best},
+                                           default_mb=mb)
         mc = monetary_cost(hw)["mc_total"]
-        score = _objective_value(lat, en, mc, objective)
+        score = scenario_score(scenario, objective, lat, en, mc, b_lat)
         if best is None or score < best.score:
             best = BaselineResult("gemini", hw, point, lat, en, mc, score,
                                   {(g.rows, g.n_cols): sa.best})
@@ -139,7 +144,7 @@ def moham_style_search(
     generations: int = 10,
     population: int = 16,
     ga_config: GAConfig | None = None,
-    objective: str = "edp_mc",
+    objective: Objective | str = "edp_mc",
     seed: int = 0,
 ) -> BaselineResult:
     """Joint hardware+mapping GA with micro_batch_size forced to 1 (each
@@ -151,6 +156,7 @@ def moham_style_search(
         hw = point.to_config(scenario.target_tops)
         batches = scenario.batches(hw)
         lat = en = 0.0
+        batch_lat = []
         encs = {}
         for batch in batches:
             g = build_execution_graph(scenario.spec, batch, 1,
@@ -171,8 +177,10 @@ def moham_style_search(
             r = evaluate(g, encs[key], hw, tables)
             lat += r.latency_s
             en += r.energy_j
+            batch_lat.append(r.latency_s)
         mc = monetary_cost(hw)["mc_total"]
-        return _objective_value(lat, en, mc, objective), (lat, en, mc, encs)
+        score = scenario_score(scenario, objective, lat, en, mc, batch_lat)
+        return score, (lat, en, mc, encs)
 
     pop = [random_point(rng, scenario.target_tops) for _ in range(population)]
     cache = {}

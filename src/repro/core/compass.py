@@ -3,10 +3,19 @@
     (H*, M*) = argmin_{H, M}  E_{lambda ~ D} [ C(lambda, H, M) ]
 
 The hardware sampling engine (BO) proposes hardware points; for each, the
-mapping generation engine (GA) searches the best mapping over batches
-sampled from the scenario's sequence-length trace; the evaluation engine
+mapping generation engine (GA) searches the best mapping over the
+per-iteration batches of the scenario's workload; the evaluation engine
 scores each (workload, hardware, mapping) triplet. The best mapping's score
 is the hardware's fitness.
+
+The scenario API is stream-first: a :class:`Scenario` carries a
+``RequestStream`` (arrival process + length distribution + request mix), a
+``Scheduler`` (the *same* iteration-level policy objects the serving
+engine runs), and an ``Objective`` (EDP / EDP·MC / latency / energy /
+SLO-aware TTFT/TPOT percentiles and goodput). The stream is rolled out
+once per scenario into the batch sequence the searched design will
+actually serve; legacy ``phase``/``trace``/``workload`` fields still work
+as thin deprecation shims that build a fixed-batch stream internally.
 
 Batches sharing an execution-graph structure (same rows x M) share one
 mapping — the mapping must serve the *distribution*, not a single batch
@@ -20,22 +29,36 @@ from typing import Sequence
 
 import numpy as np
 
+from ..serving.scheduler import Scheduler, get_scheduler
 from .bo import BOResult, HardwarePoint, bo_search
 from .encoding import MappingEncoding, as_stacked
 from .evaluator import CostTables, EvalResult, evaluate
 from .ga import GAConfig, GAResult, ga_search
 from .hardware import HardwareConfig, monetary_cost
-from .traces import (
-    ServingWorkload,
-    TraceDistribution,
-    sample_batches,
-)
+from .objectives import Objective, get_objective
+from .streams import RequestStream, StreamRollout, rollout as roll_stream
+from .traces import ServingWorkload, TraceDistribution, sample_batches
 from .workload import DECODE, PREFILL, LLMSpec, Request, build_execution_graph
 
 
 @dataclass
 class Scenario:
-    """A DSE scenario: model x trace x phase x compute target (§VI-A)."""
+    """A DSE scenario: model x workload x compute target (§VI-A).
+
+    Stream-first form::
+
+        Scenario("mix", spec, target_tops=512,
+                 stream=RequestStream("sharegpt", trace=SHAREGPT, rate=0.5),
+                 scheduler="chunked_prefill", objective="ttft_p99")
+
+    ``stream`` is rolled out under ``scheduler`` (an instance or a
+    ``repro.serving.SCHEDULERS`` name) into the per-iteration batches the
+    search evaluates; ``objective`` (an ``Objective`` or name) is the
+    default score for ``explore``. The legacy ``phase``/``trace`` /
+    ``workload`` fields are deprecation shims that construct a fixed-batch
+    stream internally — identical batches, synthetic per-request timing
+    (SLO-aware objectives refuse them).
+    """
 
     name: str
     spec: LLMSpec
@@ -44,16 +67,62 @@ class Scenario:
     trace: TraceDistribution | None = None
     batch_size: int = 4
     n_batches: int = 3                        # sampled batches averaged over
-    workload: ServingWorkload | None = None   # explicit strategy workload (§VI-F)
+    workload: ServingWorkload | None = None   # deprecated (§VI-F shim)
     n_blocks: int | None = None               # evaluated block window
     seed: int = 0
+    stream: RequestStream | None = None
+    scheduler: Scheduler | str = "orca"
+    objective: Objective | str | None = None  # default for explore()
+    max_slots: int | None = None              # engine slots for the rollout
+    max_stream_iters: int = 128               # rollout horizon (iterations)
+    _rollout: StreamRollout | None = field(
+        default=None, init=False, repr=False, compare=False)
 
-    def batches(self, hw: HardwareConfig) -> list[list[Request]]:
+    def __post_init__(self):
+        if self.stream is None and (self.trace is not None
+                                    or self.workload is not None):
+            warnings.warn(
+                "Scenario(phase=/trace=/workload=) is deprecated: pass a "
+                "RequestStream via stream= (and a scheduler=) instead. The "
+                "legacy fields are evaluated as a fixed-batch stream with "
+                "synthetic per-request timing.",
+                DeprecationWarning, stacklevel=3)
+
+    def resolved_stream(self) -> RequestStream:
+        if self.stream is not None:
+            return self.stream
         if self.workload is not None:
-            return self.workload.batches
-        assert self.trace is not None
-        return sample_batches(self.trace, self.phase, self.batch_size,
-                              self.n_batches, seed=self.seed)
+            return RequestStream.fixed_batches(self.workload.batches,
+                                               name=self.workload.name)
+        if self.trace is not None:
+            return RequestStream.fixed_batches(
+                sample_batches(self.trace, self.phase, self.batch_size,
+                               self.n_batches, seed=self.seed),
+                name=f"{self.trace.name}-{self.phase}")
+        raise ValueError(f"scenario {self.name!r} has neither stream= nor "
+                         "trace=/workload=")
+
+    def resolved_scheduler(self) -> Scheduler:
+        return get_scheduler(self.scheduler)
+
+    def resolved_objective(self, default: Objective | str = "edp_mc"
+                           ) -> Objective:
+        return get_objective(self.objective if self.objective is not None
+                             else default)
+
+    def rollout(self) -> StreamRollout:
+        """The scenario's workload as per-iteration batches (cached: the
+        rollout is hardware-independent)."""
+        if self._rollout is None:
+            # the stream's own seed is authoritative (the scenario seed
+            # drives the legacy sample_batches shim, not stream sampling)
+            self._rollout = roll_stream(
+                self.resolved_stream(), self.resolved_scheduler(),
+                max_slots=self.max_slots, max_iters=self.max_stream_iters)
+        return self._rollout
+
+    def batches(self, hw: HardwareConfig | None = None) -> list[list[Request]]:
+        return self.rollout().batches
 
     def micro_batch(self, hw: HardwareConfig, batch: list[Request]) -> int:
         if any(r.kind == DECODE for r in batch):
@@ -67,7 +136,7 @@ class MappingSearchOutput:
     latency_s: float
     energy_j: float
     mc_total: float
-    score: float
+    score: float                      # the search objective's own score
     ga_results: list[GAResult] = field(default_factory=list)
     per_batch: list[EvalResult] = field(default_factory=list)
 
@@ -75,17 +144,9 @@ class MappingSearchOutput:
     def edp(self) -> float:
         return self.latency_s * self.energy_j
 
-
-def _objective_value(lat: float, en: float, mc: float, objective: str) -> float:
-    if objective == "edp":
-        return lat * en
-    if objective == "edp_mc":
-        return lat * en * mc
-    if objective == "latency":
-        return lat
-    if objective == "energy":
-        return en
-    raise ValueError(objective)
+    @property
+    def batch_latencies(self) -> np.ndarray:
+        return np.asarray([r.latency_s for r in self.per_batch])
 
 
 def search_mapping(
@@ -94,11 +155,31 @@ def search_mapping(
     hw: HardwareConfig,
     micro_batches: Sequence[int],
     ga_config: GAConfig | None = None,
-    objective: str = "edp",
+    objective: Objective | str = "edp",
     n_blocks: int | None = None,
     use_jax: bool | None = None,
+    stream_rollout: StreamRollout | None = None,
 ) -> MappingSearchOutput:
-    """GA mapping search shared across structurally-identical batches."""
+    """GA mapping search shared across structurally-identical batches.
+
+    ``objective`` must be MC-free (``uses_mc=False``): monetary cost is
+    constant for a fixed hardware config, so an MC-bearing objective here
+    would silently degenerate — pass ``objective.inner()`` and apply the
+    full objective at the hardware level. SLO-aware objectives need
+    ``stream_rollout`` (whose ``batches`` must be the ones passed in) to
+    price per-request timing for the returned ``score``.
+    """
+    obj = get_objective(objective)
+    if obj.uses_mc:
+        raise ValueError(
+            f"objective {obj.name!r} includes monetary cost, which is "
+            "constant for a fixed hardware config and cannot drive the "
+            f"mapping search; pass its MC-free factor "
+            f"{obj.inner().name!r} (objective.inner()) instead")
+    if obj.requires_stream and stream_rollout is None:
+        raise ValueError(
+            f"objective {obj.name!r} needs the scenario's StreamRollout to "
+            "price per-request timing; pass stream_rollout=")
     ga_config = ga_config or GAConfig()
     # group batches by execution-graph structure
     groups: dict[tuple, list[int]] = {}
@@ -123,8 +204,7 @@ def search_mapping(
 
         def eval_fn(pop, group_eval=group_eval):
             lat, en = group_eval(pop)                       # (B, P)
-            obj = _objective_value(lat, en, 1.0, objective)
-            return np.asarray(obj).mean(axis=0)
+            return obj.ga_fitness(np.asarray(lat), np.asarray(en))
 
         eval_fn.accepts_stacked = True
         res = ga_search(eval_fn, rows, m_cols, hw.n_chiplets, ga_config)
@@ -136,9 +216,13 @@ def search_mapping(
     lat = float(sum(r.latency_s for r in per_batch))
     en = float(sum(r.energy_j for r in per_batch))
     mc = monetary_cost(hw)["mc_total"]
+    timings = None
+    if stream_rollout is not None and not stream_rollout.synthetic:
+        timings = stream_rollout.timings(
+            np.asarray([r.latency_s for r in per_batch]))
     return MappingSearchOutput(
         encodings=encodings, latency_s=lat, energy_j=en, mc_total=mc,
-        score=_objective_value(lat, en, mc, "edp_mc"),
+        score=obj.score(lat, en, timings=timings),
         ga_results=ga_results, per_batch=per_batch,
     )
 
@@ -187,33 +271,69 @@ class CompassResult:
     bo: BOResult
 
 
+def scenario_score(scenario: Scenario, objective: Objective | str,
+                   latency_s: float, energy_j: float, mc: float,
+                   batch_latencies=None) -> float:
+    """Score totals under an objective, pricing the scenario's rollout for
+    SLO-aware objectives (``batch_latencies``: per-iteration latencies
+    aligned with ``scenario.rollout().batches``)."""
+    obj = get_objective(objective)
+    timings = None
+    if obj.requires_stream:
+        ro = scenario.rollout()
+        if batch_latencies is None:
+            raise ValueError(f"objective {obj.name!r} needs per-iteration "
+                             "batch latencies")
+        timings = ro.timings(np.asarray(batch_latencies))
+    return obj.score(latency_s, energy_j, mc, timings)
+
+
 def hardware_objective(
     scenario: Scenario,
     point: HardwarePoint,
     ga_config: GAConfig | None = None,
-    objective: str = "edp_mc",
+    objective: Objective | str | None = None,
     use_jax: bool | None = None,
 ) -> tuple[float, MappingSearchOutput]:
+    """Fitness of one hardware point: mapping search under the scenario's
+    rollout, scored by ``objective`` (default: the scenario's, else
+    EDP·MC)."""
+    obj = scenario.resolved_objective() if objective is None \
+        else get_objective(objective)
     hw = point.to_config(scenario.target_tops)
-    batches = scenario.batches(hw)
+    ro = scenario.rollout()
+    if obj.requires_stream and ro.synthetic:
+        raise ValueError(
+            f"objective {obj.name!r} needs per-request timing from a "
+            "scheduler rollout; give the Scenario a stream= RequestStream "
+            "(the legacy phase/trace/workload shim has synthetic timing)")
+    batches = ro.batches
     mbs = [scenario.micro_batch(hw, b) for b in batches]
     out = search_mapping(scenario.spec, batches, hw, mbs, ga_config,
-                         objective="edp", n_blocks=scenario.n_blocks,
-                         use_jax=use_jax)
-    score = _objective_value(out.latency_s, out.energy_j, out.mc_total, objective)
+                         objective=obj.inner(), n_blocks=scenario.n_blocks,
+                         use_jax=use_jax,
+                         stream_rollout=None if ro.synthetic else ro)
+    score = scenario_score(scenario, obj, out.latency_s, out.energy_j,
+                           out.mc_total, out.batch_latencies)
     return score, out
 
 
-def co_explore(
+def explore(
     scenario: Scenario,
     bo_iters: int = 12,
     bo_init: int = 6,
     ga_config: GAConfig | None = None,
-    objective: str = "edp_mc",
+    objective: Objective | str | None = None,
     seed: int = 0,
     use_jax: bool | None = None,
 ) -> CompassResult:
-    """Full Compass loop: BO over hardware, GA over mappings (Eq. 1)."""
+    """Full Compass loop (Eq. 1): BO over hardware, GA over mappings, the
+    scenario's stream rolled out under its scheduler as the workload.
+
+    The single declarative entry point: everything workload-related lives
+    on the ``Scenario`` (``stream=``, ``scheduler=``, ``objective=``);
+    ``objective`` here overrides the scenario's default when given.
+    """
     cache: dict[tuple, tuple[float, MappingSearchOutput]] = {}
 
     def obj(point: HardwarePoint) -> float:
@@ -231,3 +351,7 @@ def co_explore(
         hardware=best.to_config(scenario.target_tops),
         point=best, mapping=mapping, bo=bo,
     )
+
+
+# historical name for ``explore`` (paper §V "co-exploration")
+co_explore = explore

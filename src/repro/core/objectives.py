@@ -1,0 +1,203 @@
+"""Pluggable DSE objectives (paper Eq. 1 cost C, §VI-A metrics).
+
+Replaces the stringly-typed ``_objective_value(lat, en, mc, "edp_mc")``
+dispatch with first-class :class:`Objective` values threaded through
+``search_mapping`` / ``hardware_objective`` / ``explore`` and the
+baselines. Two capability flags drive where an objective may be used:
+
+* ``uses_mc`` — the score includes monetary cost. MC is constant for a
+  fixed hardware point, so the *mapping* search rejects such objectives
+  loudly (it used to silently drop MC): pass ``objective.inner()`` (the
+  MC-free factor, e.g. EDP for EDP·MC) to the inner GA and apply the full
+  objective at the hardware level.
+* ``requires_stream`` — the score is computed from per-request timing of a
+  scheduler rollout (:class:`~repro.core.streams.RequestTimings`): TTFT /
+  TPOT percentiles and goodput-under-SLO. These refuse fixed-batch shim
+  scenarios, whose timing is synthetic.
+
+Scores are always minimised; goodput (a maximised rate) is returned
+negated. Within one structure group of the mapping GA, SLO objectives use
+total group latency as their fitness surrogate — TTFT/TPOT/goodput are
+monotone in every iteration's latency, so minimising it is aligned even
+though cross-group timing is unavailable inside a single group's search.
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+from .streams import RequestTimings
+
+
+class Objective:
+    """Minimised DSE score. Subclasses define ``score`` (scalar, from
+    totals) and ``ga_fitness`` (vectorised (B, P) per-batch latency/energy
+    -> (P,) population fitness for the mapping GA)."""
+
+    name: str = "objective"
+    uses_mc: bool = False
+    requires_stream: bool = False
+
+    def inner(self) -> "Objective":
+        """The MC-free objective the per-hardware mapping search minimises."""
+        return self
+
+    def score(self, latency_s: float, energy_j: float, mc: float = 1.0,
+              timings: RequestTimings | None = None) -> float:
+        raise NotImplementedError
+
+    def ga_fitness(self, lat: np.ndarray, en: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def _timings(self, timings: RequestTimings | None) -> RequestTimings:
+        if timings is None:
+            raise ValueError(
+                f"objective {self.name!r} needs per-request timing; give "
+                "the Scenario a RequestStream + scheduler (requires_stream)")
+        if timings.synthetic:
+            raise ValueError(
+                f"objective {self.name!r} cannot be scored on a fixed-batch "
+                "(legacy phase/trace/workload) scenario: its per-request "
+                "timing is synthetic. Use a RequestStream + scheduler.")
+        return timings
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class EDP(Objective):
+    name = "edp"
+
+    def score(self, latency_s, energy_j, mc=1.0, timings=None):
+        return float(latency_s * energy_j)
+
+    def ga_fitness(self, lat, en):
+        return (lat * en).mean(axis=0)
+
+
+class EDPxMC(Objective):
+    """EDP x monetary cost — the paper's headline co-design metric."""
+
+    name = "edp_mc"
+    uses_mc = True
+
+    def inner(self):
+        return EDP()
+
+    def score(self, latency_s, energy_j, mc=1.0, timings=None):
+        return float(latency_s * energy_j * mc)
+
+    def ga_fitness(self, lat, en):
+        raise RuntimeError(
+            "edp_mc cannot drive the mapping GA (MC is constant per "
+            "hardware point); use inner() == EDP")
+
+
+class Latency(Objective):
+    name = "latency"
+
+    def score(self, latency_s, energy_j, mc=1.0, timings=None):
+        return float(latency_s)
+
+    def ga_fitness(self, lat, en):
+        return lat.mean(axis=0)
+
+
+class Energy(Objective):
+    name = "energy"
+
+    def score(self, latency_s, energy_j, mc=1.0, timings=None):
+        return float(energy_j)
+
+    def ga_fitness(self, lat, en):
+        return en.mean(axis=0)
+
+
+class _StreamObjective(Objective):
+    """SLO-aware base: scored from rollout timings; within one structure
+    group the GA minimises total latency (monotone surrogate, see module
+    docstring)."""
+
+    requires_stream = True
+
+    def ga_fitness(self, lat, en):
+        return lat.mean(axis=0)
+
+
+class TTFTPercentile(_StreamObjective):
+    """p-th percentile time-to-first-token over cold requests (seconds);
+    requests unserved within the horizon count as +inf, so the search is
+    pushed to actually serve first tokens."""
+
+    def __init__(self, pct: float = 99.0):
+        self.pct = float(pct)
+        self.name = f"ttft_p{pct:g}"
+
+    def score(self, latency_s, energy_j, mc=1.0, timings=None):
+        t = self._timings(timings)
+        ttft = t.cold_ttft_s
+        if ttft.size == 0:
+            raise ValueError("stream has no cold requests: TTFT undefined")
+        # method="higher": no interpolation, so +inf (unserved) stays +inf
+        # instead of poisoning the estimate with nan
+        return float(np.percentile(ttft, self.pct, method="higher"))
+
+
+class TPOTPercentile(_StreamObjective):
+    """p-th percentile time-per-output-token over all requests (seconds);
+    unfinished requests count as +inf."""
+
+    def __init__(self, pct: float = 99.0):
+        self.pct = float(pct)
+        self.name = f"tpot_p{pct:g}"
+
+    def score(self, latency_s, energy_j, mc=1.0, timings=None):
+        t = self._timings(timings)
+        return float(np.percentile(t.tpot_s, self.pct, method="higher"))
+
+
+class GoodputUnderSLO(_StreamObjective):
+    """Negated goodput: -(requests finished within both SLOs) / makespan.
+    Warm requests have no TTFT and are held to the TPOT SLO only."""
+
+    def __init__(self, ttft_slo_s: float = 0.5, tpot_slo_s: float = 0.1):
+        self.ttft_slo_s = float(ttft_slo_s)
+        self.tpot_slo_s = float(tpot_slo_s)
+        self.name = f"goodput@ttft{ttft_slo_s:g}s/tpot{tpot_slo_s:g}s"
+
+    def score(self, latency_s, energy_j, mc=1.0, timings=None):
+        t = self._timings(timings)
+        ttft_ok = t.warm | (t.ttft_s <= self.ttft_slo_s)
+        ok = t.finished & ttft_ok & (t.tpot_s <= self.tpot_slo_s)
+        if t.makespan_s <= 0.0:
+            return 0.0
+        return -float(ok.sum() / t.makespan_s)
+
+
+_NAMED = {
+    "edp": EDP,
+    "edp_mc": EDPxMC,
+    "latency": Latency,
+    "energy": Energy,
+    "goodput": GoodputUnderSLO,
+}
+_PCTL = re.compile(r"^(ttft|tpot)_p(\d+(?:\.\d+)?)$")
+
+OBJECTIVES = tuple(sorted(_NAMED)) + ("ttft_p<P>", "tpot_p<P>")
+
+
+def get_objective(obj: "Objective | str") -> Objective:
+    """Resolve an objective name ('edp', 'edp_mc', 'latency', 'energy',
+    'goodput', 'ttft_p99', 'tpot_p50', ...) or pass an instance through."""
+    if isinstance(obj, Objective):
+        return obj
+    if isinstance(obj, str):
+        if obj in _NAMED:
+            return _NAMED[obj]()
+        m = _PCTL.match(obj)
+        if m:
+            cls = TTFTPercentile if m.group(1) == "ttft" else TPOTPercentile
+            return cls(float(m.group(2)))
+    raise ValueError(f"unknown objective {obj!r}; choose from "
+                     f"{OBJECTIVES} or pass an Objective instance")

@@ -1,0 +1,303 @@
+"""Request streams — the stream-first scenario input (paper §V, §VI-F).
+
+A :class:`RequestStream` models the *arrival process* of an LLM serving
+workload instead of a pre-sampled batch list: request lengths drawn from a
+:class:`~repro.core.traces.TraceDistribution` (or given explicitly),
+arrivals Poisson or deterministic at ``rate`` requests per scheduler
+iteration, and mixed request kinds — cold requests that must be prefilled
+plus warm, decode-resident requests that model an already-loaded server.
+
+The stream is rolled out into per-iteration DSE batches by the *same*
+iteration-level :class:`~repro.serving.scheduler.Scheduler` policies the
+real engine runs (vLLM-separated / Orca-mixed / Chunked-Prefill), via the
+schedulers' pure ``plan_rollout`` mode — so a searched design is evaluated
+under exactly the batch compositions it will be served with.
+
+The rollout records per-request iteration indices; once the evaluator
+prices each iteration's batch, :meth:`StreamRollout.timings` turns the
+per-iteration latency vector into per-request TTFT / TPOT / completion
+times, from which the SLO-aware objectives in ``repro.core.objectives``
+(TTFT/TPOT percentiles, goodput-under-SLO) are computed.
+
+Time is modelled in *scheduler iterations*: an arrival rate of ``r`` means
+``r`` requests per engine iteration, and idle iterations (nothing admitted,
+nothing running) take zero modelled time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from ..serving.scheduler import Scheduler, ServeRequest, plan_rollout
+from .traces import TraceDistribution
+from .workload import DECODE, PREFILL, Request
+
+ARRIVALS = ("poisson", "deterministic")
+
+
+@dataclass(frozen=True)
+class StreamRequest:
+    """One request of a stream, in DSE units (token counts, not tokens)."""
+
+    prompt_len: int
+    max_new_tokens: int
+    arrival_iter: int = 0
+    warm_context: int = 0   # > 0: enters decode-resident with this context
+
+    @property
+    def warm(self) -> bool:
+        return self.warm_context > 0
+
+
+@dataclass
+class RequestStream:
+    """An arrival process over requests.
+
+    Three construction modes:
+
+    * distribution mode (default): ``n_requests`` requests with lengths
+      drawn from ``trace`` and arrival iterations from ``arrival``/``rate``;
+      a ``warm_fraction`` of them enter decode-resident at a random
+      progress point (the streaming analogue of ``decode_batch``);
+    * explicit mode: ``from_requests`` with a literal request list;
+    * fixed mode: ``fixed_batches`` wraps pre-composed per-iteration
+      batches (the legacy ``Scenario(phase=..., trace=...)`` /
+      ``workload=`` deprecation shims) — no scheduler is involved and
+      per-request timing is synthetic.
+    """
+
+    name: str
+    trace: TraceDistribution | None = None
+    arrival: str = "poisson"          # poisson | deterministic
+    rate: float = 1.0                 # mean requests per scheduler iteration
+    n_requests: int = 8
+    warm_fraction: float = 0.0
+    max_new_tokens_cap: int | None = 32
+    requests: tuple[StreamRequest, ...] | None = None
+    batches: tuple[tuple[Request, ...], ...] | None = None   # fixed mode
+    seed: int = 0
+
+    @classmethod
+    def from_requests(cls, requests: Sequence[StreamRequest],
+                      name: str = "explicit") -> "RequestStream":
+        return cls(name=name, requests=tuple(requests))
+
+    @classmethod
+    def fixed_batches(cls, batches: Sequence[Sequence[Request]],
+                      name: str = "fixed") -> "RequestStream":
+        return cls(name=name, batches=tuple(tuple(b) for b in batches))
+
+    @property
+    def is_fixed(self) -> bool:
+        return self.batches is not None
+
+    def sample(self, seed: int | None = None) -> list[StreamRequest]:
+        """Materialise the request list (deterministic for a fixed seed)."""
+        assert not self.is_fixed, "fixed-batch streams have no request list"
+        if self.requests is not None:
+            return list(self.requests)
+        if self.trace is None:
+            raise ValueError(
+                f"stream {self.name!r} needs a trace, an explicit request "
+                "list, or fixed batches")
+        if self.arrival not in ARRIVALS:
+            raise ValueError(f"unknown arrival process {self.arrival!r}; "
+                             f"choose from {ARRIVALS}")
+        rng = np.random.default_rng(self.seed if seed is None else seed)
+        lens = self.trace.sample(rng, self.n_requests)
+        if self.arrival == "poisson":
+            gaps = rng.exponential(1.0 / self.rate, size=self.n_requests)
+            arrivals = np.floor(np.cumsum(gaps) - gaps[0]).astype(int)
+        else:
+            arrivals = (np.arange(self.n_requests) / self.rate).astype(int)
+        warm = rng.random(self.n_requests) < self.warm_fraction
+        out = []
+        for i, (ilen, olen) in enumerate(lens):
+            new = int(olen) if self.max_new_tokens_cap is None \
+                else min(int(olen), self.max_new_tokens_cap)
+            new = max(new, 1)
+            if warm[i]:
+                # decode-resident snapshot: context = input + progress*output
+                ctx = int(ilen + rng.random() * olen) + 1
+                out.append(StreamRequest(ilen, new, int(arrivals[i]),
+                                         warm_context=ctx))
+            else:
+                out.append(StreamRequest(ilen, new, int(arrivals[i])))
+        return out
+
+
+def mixed_serving_stream(prefill_len: int, decode_ctx: int, decode_bs: int,
+                         n_decode_batches: int,
+                         name: str = "serving_mix") -> RequestStream:
+    """The paper's §VI-F serving mix as a stream: one cold prefill request
+    arriving into a server already decoding ``decode_bs`` warm requests at
+    context ``decode_ctx``. Under each scheduler this reproduces the
+    vLLM-separated / Orca-mixed / Chunked-Prefill batch compositions of
+    Fig. 9 (golden parity tested)."""
+    reqs = [StreamRequest(prefill_len, 1)]
+    reqs += [StreamRequest(decode_ctx, n_decode_batches,
+                           warm_context=decode_ctx)
+             for _ in range(decode_bs)]
+    return RequestStream.from_requests(reqs, name=name)
+
+
+# --------------------------------------------------------------------------
+# Rollout
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class RequestTimings:
+    """Per-request timing of a priced rollout (seconds)."""
+
+    ttft_s: np.ndarray        # (R,) inf if no first token within horizon
+    tpot_s: np.ndarray        # (R,) inf if unfinished; 0 for 1-token outputs
+    finished: np.ndarray      # (R,) bool
+    warm: np.ndarray          # (R,) bool — TTFT undefined for these
+    makespan_s: float
+    synthetic: bool = False   # fixed-batch shim: no real scheduler timing
+
+    @property
+    def cold_ttft_s(self) -> np.ndarray:
+        return self.ttft_s[~self.warm]
+
+
+@dataclass
+class StreamRollout:
+    """A stream rolled out under one scheduler: the evaluated batches plus
+    the per-request iteration indices needed to price SLO objectives."""
+
+    stream_name: str
+    scheduler_name: str
+    batches: list[list[Request]]     # one per executed (non-empty) iteration
+    arrival_b: np.ndarray            # (R,) first batch index >= arrival
+    first_b: np.ndarray              # (R,) batch index of first token; -1
+    done_b: np.ndarray               # (R,) batch index finished; -1
+    n_new_tokens: np.ndarray         # (R,) tokens generated within horizon
+    warm: np.ndarray                 # (R,) bool
+    synthetic: bool = False
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.arrival_b)
+
+    def timings(self, batch_latency_s) -> RequestTimings:
+        """Price the rollout: ``batch_latency_s`` is the evaluator's latency
+        per executed iteration, shape (B,). TTFT runs from the start of the
+        first executed iteration at/after arrival (queueing included) to
+        the end of the first-token iteration; TPOT is the mean inter-token
+        time over the remaining output."""
+        lat = np.asarray(batch_latency_s, dtype=float)
+        assert lat.shape == (len(self.batches),), \
+            f"expected ({len(self.batches)},) latencies, got {lat.shape}"
+        cum = np.concatenate([[0.0], np.cumsum(lat)])
+        served = self.first_b >= 0
+        fin = self.done_b >= 0
+        ttft = np.full(self.n_requests, np.inf)
+        ttft[served] = (cum[self.first_b[served] + 1]
+                        - cum[np.minimum(self.arrival_b[served],
+                                         len(self.batches) - 1)])
+        tpot = np.full(self.n_requests, np.inf)
+        steps = np.maximum(self.n_new_tokens - 1, 1)
+        tpot[fin] = (cum[self.done_b[fin] + 1]
+                     - cum[self.first_b[fin] + 1]) / steps[fin]
+        one_tok = fin & (self.n_new_tokens <= 1)
+        tpot[one_tok] = 0.0
+        return RequestTimings(ttft_s=ttft, tpot_s=tpot, finished=fin,
+                              warm=self.warm, makespan_s=float(cum[-1]),
+                              synthetic=self.synthetic)
+
+
+def _fixed_rollout(stream: RequestStream) -> StreamRollout:
+    """Fixed-batch shim: each pre-composed batch is one iteration and every
+    request lives exactly in its batch — timing is synthetic (SLO-aware
+    objectives refuse it)."""
+    batches = [list(b) for b in stream.batches]
+    arr, first, done, ntok, warm = [], [], [], [], []
+    for i, b in enumerate(batches):
+        for r in b:
+            arr.append(i)
+            first.append(i)
+            done.append(i)
+            ntok.append(1)
+            warm.append(r.kind == DECODE)
+    return StreamRollout(
+        stream_name=stream.name, scheduler_name="fixed",
+        batches=batches,
+        arrival_b=np.asarray(arr, dtype=int),
+        first_b=np.asarray(first, dtype=int),
+        done_b=np.asarray(done, dtype=int),
+        n_new_tokens=np.asarray(ntok, dtype=int),
+        warm=np.asarray(warm, dtype=bool),
+        synthetic=True,
+    )
+
+
+def rollout(stream: RequestStream, scheduler: Scheduler | None = None,
+            max_slots: int | None = None, max_iters: int = 256,
+            seed: int | None = None) -> StreamRollout:
+    """Roll a stream out under a scheduler into per-iteration DSE batches.
+
+    Decode requests attend ``prefilled + generated`` tokens (prompt + all
+    tokens produced so far, the engine's cache occupancy); prefill chunks
+    attend their own prior context plus the chunk — identical to the
+    engine's execution and to the paper's §VI-F batch compositions.
+    """
+    if stream.is_fixed:
+        return _fixed_rollout(stream)
+    if scheduler is None:
+        raise ValueError("a non-fixed RequestStream needs a Scheduler to "
+                         "be rolled out")
+    sreqs = stream.sample(seed)
+    serve: list[ServeRequest] = []
+    for i, s in enumerate(sreqs):
+        if s.warm:
+            serve.append(ServeRequest(
+                i, [0] * s.warm_context, s.max_new_tokens,
+                prefilled=s.warm_context, arrived_iter=s.arrival_iter))
+        else:
+            serve.append(ServeRequest(
+                i, [0] * max(s.prompt_len, 1), s.max_new_tokens,
+                arrived_iter=s.arrival_iter))
+    n_slots = max_slots if max_slots is not None else len(serve)
+
+    n = len(serve)
+    is_warm = np.asarray([s.warm for s in sreqs], dtype=bool)
+    first_b = np.full(n, -1, dtype=int)
+    batches: list[list[Request]] = []
+    kept_its: list[int] = []
+    for it, plan in plan_rollout(serve, scheduler, n_slots, max_iters):
+        bi = len(batches)
+        batch: list[Request] = []
+        for req, chunk_len in plan.prefill:
+            batch.append(Request(PREFILL, chunk_len,
+                                 req.prefilled + chunk_len))
+        for r in plan.decode:
+            batch.append(Request(DECODE, 1, r.prefilled + len(r.generated)))
+            if is_warm[r.rid] and first_b[r.rid] < 0:
+                first_b[r.rid] = bi      # warm: first decode == first token
+        batches.append(batch)
+        kept_its.append(it)
+
+    kept = np.asarray(kept_its, dtype=int)
+    it_to_b = {raw: i for i, raw in enumerate(kept_its)}
+    arrival_b = np.searchsorted(
+        kept, np.asarray([s.arrival_iter for s in sreqs]), side="left")
+    done_b = np.full(n, -1, dtype=int)
+    for r in serve:
+        if r.first_token_iter is not None and first_b[r.rid] < 0:
+            first_b[r.rid] = it_to_b[r.first_token_iter]
+        if r.done_iter is not None:
+            done_b[r.rid] = it_to_b[r.done_iter]
+    return StreamRollout(
+        stream_name=stream.name,
+        scheduler_name=getattr(scheduler, "name", type(scheduler).__name__),
+        batches=batches,
+        arrival_b=np.asarray(arrival_b, dtype=int),
+        first_b=first_b,
+        done_b=done_b,
+        n_new_tokens=np.asarray([len(r.generated) for r in serve], dtype=int),
+        warm=is_warm,
+    )

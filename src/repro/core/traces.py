@@ -13,18 +13,21 @@ Both are modelled as clipped log-normals fitted to the published means (the
 real datasets are not shipped; the distribution object also accepts explicit
 sample lists, so real traces can be plugged in).
 
-Serving strategies (§VI-F, Fig. 9): vLLM-separated, Orca-mixed and
-Chunked-Prefill batch compositions over the same request stream.
+Serving-strategy batch compositions (§VI-F, Fig. 9) are no longer built
+here by hand: ``repro.core.streams`` rolls a ``RequestStream`` out under
+the *real* ``repro.serving.scheduler`` policies (vLLM-separated,
+Orca-mixed, Chunked-Prefill), one shared composition path for search and
+serving. ``ServingWorkload`` remains only as the container behind the
+legacy ``Scenario(workload=...)`` deprecation shim.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Sequence
+from dataclasses import dataclass
 
 import numpy as np
 
-from .workload import DECODE, PREFILL, Request, decode_request, prefill_request
+from .workload import PREFILL, Request, decode_request, prefill_request
 
 
 @dataclass
@@ -86,65 +89,22 @@ def sample_batches(trace: TraceDistribution, phase: str, batch_size: int,
 
 
 # --------------------------------------------------------------------------
-# Serving strategies (paper §VI-F, Fig. 9)
+# Legacy workload container (deprecated — use RequestStream + Scheduler)
 # --------------------------------------------------------------------------
 
 
 @dataclass
 class ServingWorkload:
-    """A DSE workload = sequence of batches processed per scheduling round."""
+    """A DSE workload = explicit sequence of per-iteration batches.
+
+    Deprecated: batch compositions now come from rolling a
+    ``repro.core.streams.RequestStream`` out under a real
+    ``repro.serving.scheduler`` policy; ``Scenario(workload=...)`` wraps
+    this container into a fixed-batch stream for backwards compatibility.
+    """
 
     name: str
     batches: list[list[Request]]
 
     def n_requests(self) -> int:
         return sum(len(b) for b in self.batches)
-
-
-def vllm_strategy(prefill_len: int, decode_ctx: int, decode_bs: int,
-                  n_decode_batches: int) -> ServingWorkload:
-    """Separated: the prefill request forms a standalone batch; decode
-    batches run afterwards (vLLM pauses decodes for arriving prefills)."""
-    batches = [[prefill_request(prefill_len)]]
-    for i in range(n_decode_batches):
-        batches.append([decode_request(decode_ctx + i) for _ in range(decode_bs)])
-    return ServingWorkload("vllm", batches)
-
-
-def orca_strategy(prefill_len: int, decode_ctx: int, decode_bs: int,
-                  n_decode_batches: int) -> ServingWorkload:
-    """Mixed: the prefill request is co-batched with decode requests in the
-    first iteration (Orca's iteration-level scheduling)."""
-    first = [prefill_request(prefill_len)] + [
-        decode_request(decode_ctx) for _ in range(decode_bs)
-    ]
-    batches = [first]
-    for i in range(1, n_decode_batches):
-        batches.append([decode_request(decode_ctx + i) for _ in range(decode_bs)])
-    return ServingWorkload("orca", batches)
-
-
-def chunked_prefill_strategy(prefill_len: int, decode_ctx: int, decode_bs: int,
-                             n_decode_batches: int,
-                             chunk: int = 2048) -> ServingWorkload:
-    """Chunked Prefill: the prefill is split into chunks, each co-batched
-    with decode requests (Sarathi-Serve)."""
-    n_chunks = max(1, -(-prefill_len // chunk))
-    batches = []
-    consumed = 0
-    for ci in range(max(n_chunks, n_decode_batches)):
-        b: list[Request] = []
-        if ci < n_chunks:
-            this = min(chunk, prefill_len - consumed)
-            b.append(Request(PREFILL, this, consumed + this))
-            consumed += this
-        b.extend(decode_request(decode_ctx + ci) for _ in range(decode_bs))
-        batches.append(b)
-    return ServingWorkload("chunked_prefill", batches)
-
-
-STRATEGIES = {
-    "vllm": vllm_strategy,
-    "orca": orca_strategy,
-    "chunked_prefill": chunked_prefill_strategy,
-}

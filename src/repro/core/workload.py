@@ -18,8 +18,7 @@ fan-in, MoE routing), which keeps the evaluator vectorisable.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Sequence
 
 PREFILL = "prefill"
@@ -34,7 +33,11 @@ class Request:
 
     def __post_init__(self):
         assert self.kind in (PREFILL, DECODE)
-        assert self.q_len >= 1 and self.kv_len >= self.q_len or self.kind == DECODE
+        # q_len >= 1 for BOTH kinds; kv_len >= q_len only required for
+        # prefill (a decode snapshot may attend a context shorter than its
+        # recorded kv_len bookkeeping would suggest).
+        assert self.q_len >= 1 and (self.kv_len >= self.q_len
+                                    or self.kind == DECODE)
 
 
 def prefill_request(seq_len: int, prior_context: int = 0) -> Request:

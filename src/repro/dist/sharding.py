@@ -21,7 +21,6 @@ rules.
 """
 from __future__ import annotations
 
-import math
 
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P

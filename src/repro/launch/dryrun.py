@@ -16,7 +16,6 @@ import argparse
 import json
 import re
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +38,7 @@ from ..models.transformer import (
     init_model,
     prefill_scanned,
 )
-from ..training.optimizer import AdamWConfig, adamw_init
+from ..training.optimizer import adamw_init
 from ..training.train_loop import TrainConfig, make_train_step
 from .mesh import make_production_mesh
 

@@ -12,7 +12,7 @@ assignment: callers pass precomputed embeddings via ``inputs_embeds``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax

@@ -1,8 +1,23 @@
-from .engine import ServingEngine, summarize  # noqa: F401
 from .scheduler import (  # noqa: F401
     SCHEDULERS,
     ChunkedPrefillScheduler,
+    IterationPlan,
     OrcaScheduler,
+    Scheduler,
     ServeRequest,
     VLLMScheduler,
+    get_scheduler,
+    plan_rollout,
 )
+
+# ``ServingEngine`` pulls in jax + the model stack; the DSE layer only needs
+# the (pure-python) schedulers, so the engine is loaded lazily (PEP 562).
+_ENGINE_EXPORTS = ("ServingEngine", "summarize", "IterationStats")
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from . import engine
+
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

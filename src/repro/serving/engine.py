@@ -10,7 +10,7 @@ the DSE layer models.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -18,7 +18,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.transformer import ModelConfig, decode_step, extend, init_cache
-from .scheduler import IterationPlan, Scheduler, ServeRequest
+from .scheduler import (
+    Scheduler,
+    ServeRequest,
+    admit_arrivals,
+    complete_prefill,
+    retire_finished,
+    try_admit,
+)
 
 
 @dataclass
@@ -79,21 +86,33 @@ class ServingEngine:
 
     def run(self, requests: list[ServeRequest], scheduler: Scheduler,
             max_iters: int = 10_000):
-        waiting = list(requests)
+        for r in requests:
+            if r.prefill_done and r.slot is None:
+                # warm (decode-resident) requests are a pure-rollout
+                # modeling device: the engine has no KV state for a prompt
+                # it never ran, so admitting one would decode over a stale
+                # or zeroed cache and silently emit garbage
+                raise ValueError(
+                    f"request {r.rid} is already prefilled but holds no "
+                    "cache slot; the engine cannot serve warm requests — "
+                    "use repro.core.streams.rollout for pure simulation")
+        pending = sorted(requests, key=lambda r: r.arrived_iter)
+        waiting: list[ServeRequest] = []
         running: list[ServeRequest] = []
         finished: list[ServeRequest] = []
         stats: list[IterationStats] = []
         it = 0
-        while (waiting or running) and it < max_iters:
+        while (pending or waiting or running) and it < max_iters:
+            admit_arrivals(pending, waiting, running, self.free, it)
             plan = scheduler.plan(waiting, running, len(self.free))
             t0 = time.perf_counter()
             n_prefill_tok = 0
 
             for req, chunk_len in plan.prefill:
-                if req.slot is None:
-                    if not self.free:
-                        continue
-                    req.slot = self.free.pop()
+                had_slot = req.slot is not None
+                if not try_admit(req, self.free):
+                    continue
+                if not had_slot:
                     self._reset_slot(req.slot)
                 chunk = req.prompt[req.prefilled: req.prefilled + chunk_len]
                 n = len(chunk)
@@ -107,9 +126,7 @@ class ServingEngine:
                 n_prefill_tok += n
                 if req.prefill_done:
                     req.generated.append(int(tok))
-                    req.first_token_iter = it
-                    waiting.remove(req)
-                    running.append(req)
+                    complete_prefill(req, it, waiting, running)
 
             if plan.decode:
                 toks = np.zeros((self.max_batch,), np.int32)
@@ -124,12 +141,7 @@ class ServingEngine:
                 for r in plan.decode:
                     r.generated.append(int(new_toks[r.slot]))
 
-            for r in list(running):
-                if r.finished:
-                    r.done_iter = it
-                    running.remove(r)
-                    finished.append(r)
-                    self.free.append(r.slot)
+            retire_finished(running, finished, self.free, it)
 
             stats.append(IterationStats(
                 it, n_prefill_tok, len(plan.decode),

@@ -9,9 +9,16 @@ All three SOTA batch-composition policies over one request queue:
 * ``ChunkedPrefillScheduler`` — prefills are split into fixed-size chunks,
                          each co-scheduled with the running decodes.
 
-The scheduler decides *composition*; the engine executes it. These are the
-same workload shapes the DSE layer's ``traces.STRATEGIES`` feed to Compass,
-so a searched design can be replayed against the real engine.
+The scheduler decides *composition*; the engine executes it. The same
+policy objects drive two consumers:
+
+* ``ServingEngine.run`` — the real jit'd execution loop;
+* ``plan_rollout``     — a *pure* rollout (no engine, no computation) that
+  replays the identical admission / slot / retirement bookkeeping over
+  synthetic tokens. ``repro.core.streams`` uses it to turn a
+  ``RequestStream`` into the per-iteration DSE batches Compass searches
+  over, so a searched design is evaluated under exactly the policy it
+  will be served with.
 """
 from __future__ import annotations
 
@@ -99,3 +106,121 @@ SCHEDULERS = {
     "orca": OrcaScheduler,
     "chunked_prefill": ChunkedPrefillScheduler,
 }
+
+
+def get_scheduler(sched: Scheduler | str) -> Scheduler:
+    """Resolve a scheduler name (``SCHEDULERS`` key) or pass an instance
+    through."""
+    if isinstance(sched, Scheduler):
+        return sched
+    try:
+        return SCHEDULERS[sched]()
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {sched!r}; choose from {sorted(SCHEDULERS)} "
+            "or pass a Scheduler instance") from None
+
+
+# --------------------------------------------------------------------------
+# Shared scheduling-state transitions
+#
+# The engine's run loop and the pure rollout must agree exactly on
+# admission, slot assignment, prefill completion and retirement — both call
+# these helpers, so parity is structural rather than re-implemented.
+# --------------------------------------------------------------------------
+
+
+def try_admit(req: ServeRequest, free_slots: list[int]) -> bool:
+    """Assign a cache slot if the request has none; False when full."""
+    if req.slot is None:
+        if not free_slots:
+            return False
+        req.slot = free_slots.pop()
+    return True
+
+
+def admit_arrivals(pending: list[ServeRequest], waiting: list[ServeRequest],
+                   running: list[ServeRequest], free_slots: list[int],
+                   it: int) -> None:
+    """Move requests whose ``arrived_iter`` has come into the scheduler's
+    view. Cold requests join the waiting queue; warm (already-prefilled,
+    decode-resident) requests go straight to running and take a slot —
+    if none is free the arrival is retried next iteration."""
+    while pending and pending[0].arrived_iter <= it:
+        r = pending.pop(0)
+        if r.prefill_done:
+            if not try_admit(r, free_slots):
+                pending.insert(0, r)
+                break
+            running.append(r)
+        else:
+            waiting.append(r)
+
+
+def complete_prefill(req: ServeRequest, it: int, waiting: list[ServeRequest],
+                     running: list[ServeRequest]) -> None:
+    req.first_token_iter = it
+    waiting.remove(req)
+    running.append(req)
+
+
+def retire_finished(running: list[ServeRequest], finished: list[ServeRequest],
+                    free_slots: list[int], it: int) -> None:
+    for r in list(running):
+        if r.finished:
+            r.done_iter = it
+            running.remove(r)
+            finished.append(r)
+            if r.slot is not None:
+                free_slots.append(r.slot)
+                r.slot = None
+
+
+# --------------------------------------------------------------------------
+# Pure plan-rollout (no engine)
+# --------------------------------------------------------------------------
+
+
+def plan_rollout(requests: list[ServeRequest], scheduler: Scheduler,
+                 max_slots: int, max_iters: int = 100_000):
+    """Drive ``scheduler.plan`` over a request set with the engine's exact
+    bookkeeping but no computation — generated tokens are placeholders.
+
+    Yields ``(it, plan)`` for every *non-empty* iteration, with the plan's
+    prefill entries already admission-filtered; request state (``prefilled``
+    / ``generated`` / ``first_token_iter`` / ``done_iter``) is advanced
+    after the consumer resumes, so at yield time each request still shows
+    its pre-iteration state. Idle gaps before future arrivals are skipped
+    in O(1).
+    """
+    pending = sorted(requests, key=lambda r: r.arrived_iter)
+    waiting: list[ServeRequest] = []
+    running: list[ServeRequest] = []
+    finished: list[ServeRequest] = []
+    free = list(range(max_slots))
+    it = 0
+    while (pending or waiting or running) and it < max_iters:
+        admit_arrivals(pending, waiting, running, free, it)
+        plan = scheduler.plan(waiting, running, len(free))
+        prefill = [(req, n) for req, n in plan.prefill
+                   if try_admit(req, free)]
+        plan = IterationPlan(prefill=prefill, decode=list(plan.decode))
+
+        if not plan.prefill and not plan.decode:
+            if not waiting and not running and pending:
+                it = pending[0].arrived_iter  # fast-forward the idle gap
+                continue
+            it += 1
+            continue
+
+        yield it, plan
+
+        for req, chunk_len in plan.prefill:
+            req.prefilled += chunk_len
+            if req.prefill_done:
+                req.generated.append(0)
+                complete_prefill(req, it, waiting, running)
+        for r in plan.decode:
+            r.generated.append(0)
+        retire_finished(running, finished, free, it)
+        it += 1

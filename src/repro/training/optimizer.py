@@ -6,7 +6,6 @@ apply (``dist.sharding.optimizer_spec`` ZeRO-shards it over the data axis).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,6 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

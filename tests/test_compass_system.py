@@ -1,24 +1,30 @@
 """End-to-end Compass co-exploration + baselines (reduced budgets)."""
+import warnings
+
 import numpy as np
 import pytest
 
 from repro.core.baselines import gemini_style_search, scar_style_mapping
-from repro.core.compass import Scenario, co_explore, hardware_objective
+from repro.core.compass import Scenario, co_explore, explore, hardware_objective
 from repro.core.evaluator import CostTables, evaluate
 from repro.core.encoding import pipeline_parallel
 from repro.core.ga import GAConfig
 from repro.core.bo import random_point
 from repro.core.hardware import make_hardware
-from repro.core.traces import SHAREGPT
+from repro.core.streams import RequestStream
+from repro.core.traces import SHAREGPT, TraceDistribution
 from repro.core.workload import LLMSpec, build_execution_graph, prefill_request
 
 SPEC = LLMSpec("tiny", 512, 8, 8, 64, 2048, 32000, 8)
+SMALL = TraceDistribution("small", mean_input=48, mean_output=12, max_len=256)
 
 
 @pytest.fixture(scope="module")
 def scenario():
-    return Scenario("t", SPEC, target_tops=64, phase="prefill",
-                    trace=SHAREGPT, batch_size=4, n_batches=2, n_blocks=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return Scenario("t", SPEC, target_tops=64, phase="prefill",
+                        trace=SHAREGPT, batch_size=4, n_batches=2, n_blocks=2)
 
 
 def test_co_explore_end_to_end(scenario):
@@ -42,6 +48,33 @@ def test_gemini_baseline_runs(scenario):
     assert res.latency_s > 0 and res.mc_total > 0
     # homogeneous layout by construction
     assert len(set(res.hardware.layout)) == 1
+
+
+@pytest.mark.parametrize("sched", ["vllm", "orca", "chunked_prefill"])
+def test_explore_stream_scenario_end_to_end(sched):
+    """Acceptance: explore() on a Poisson RequestStream under each of the
+    three schedulers with an SLO-aware objective."""
+    st = RequestStream("poisson", trace=SMALL, rate=1.0, n_requests=4,
+                       max_new_tokens_cap=3, seed=1)
+    sc = Scenario("stream", SPEC, target_tops=64, stream=st, scheduler=sched,
+                  objective="ttft_p99", n_blocks=1, max_stream_iters=32)
+    res = explore(sc, bo_iters=1, bo_init=2,
+                  ga_config=GAConfig(population=8, generations=2), seed=0)
+    assert np.isfinite(res.bo.best_score) and res.bo.best_score > 0
+    assert res.mapping.latency_s > 0
+    assert len(sc.rollout().batches) >= 2
+
+
+def test_explore_goodput_objective():
+    st = RequestStream("poisson", trace=SMALL, rate=1.0, n_requests=4,
+                       max_new_tokens_cap=3, seed=1)
+    sc = Scenario("stream", SPEC, target_tops=64, stream=st,
+                  scheduler="orca", objective="goodput", n_blocks=1)
+    p = random_point(np.random.default_rng(0), 64)
+    score, out = hardware_objective(sc, p, GAConfig(population=8,
+                                                    generations=2))
+    assert score < 0          # negated goodput: some requests met the SLOs
+    assert out.mc_total > 0
 
 
 def test_scar_mapping_beats_naive_pipeline_or_close():

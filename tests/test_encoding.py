@@ -1,10 +1,8 @@
 """Mapping encoding scheme (paper §IV) — unit + property tests."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.encoding import (
-    MappingEncoding,
     data_parallel,
     model_parallel,
     pipeline_parallel,

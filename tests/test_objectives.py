@@ -1,0 +1,144 @@
+"""Objective protocol: resolution, capability flags, SLO scoring, and the
+legacy scenario shim's score identity with an explicit fixed stream."""
+import numpy as np
+import pytest
+
+from repro.core.compass import Scenario, hardware_objective, search_mapping
+from repro.core.bo import random_point
+from repro.core.ga import GAConfig
+from repro.core.hardware import make_hardware
+from repro.core.objectives import (
+    EDP,
+    EDPxMC,
+    GoodputUnderSLO,
+    Latency,
+    TTFTPercentile,
+    get_objective,
+)
+from repro.core.streams import (
+    RequestStream,
+    RequestTimings,
+    StreamRequest,
+    rollout,
+)
+from repro.core.traces import SHAREGPT, sample_batches
+from repro.core.workload import LLMSpec, prefill_request
+from repro.serving.scheduler import get_scheduler
+
+SPEC = LLMSpec("tiny", 512, 8, 8, 64, 2048, 32000, 8)
+
+
+def test_get_objective_resolution():
+    assert isinstance(get_objective("edp"), EDP)
+    assert get_objective("edp_mc").uses_mc
+    assert get_objective("ttft_p99").pct == 99.0
+    assert get_objective("tpot_p50").pct == 50.0
+    assert get_objective("goodput").requires_stream
+    o = Latency()
+    assert get_objective(o) is o
+    with pytest.raises(ValueError):
+        get_objective("nope")
+
+
+def test_simple_scores_and_ga_fitness():
+    lat = np.array([[1.0, 2.0], [3.0, 4.0]])     # (B=2, P=2)
+    en = np.array([[2.0, 2.0], [2.0, 2.0]])
+    np.testing.assert_allclose(EDP().ga_fitness(lat, en), [4.0, 6.0])
+    np.testing.assert_allclose(Latency().ga_fitness(lat, en), [2.0, 3.0])
+    assert EDP().score(2.0, 3.0) == 6.0
+    assert EDPxMC().score(2.0, 3.0, 10.0) == 60.0
+    assert isinstance(EDPxMC().inner(), EDP)
+
+
+def _timings(ttft, tpot, finished, warm, makespan):
+    return RequestTimings(
+        ttft_s=np.asarray(ttft, dtype=float),
+        tpot_s=np.asarray(tpot, dtype=float),
+        finished=np.asarray(finished, dtype=bool),
+        warm=np.asarray(warm, dtype=bool),
+        makespan_s=makespan)
+
+
+def test_slo_objectives_on_hand_built_timings():
+    t = _timings(ttft=[0.1, 0.4, np.inf], tpot=[0.05, 0.2, np.inf],
+                 finished=[True, True, False], warm=[False, False, False],
+                 makespan=2.0)
+    assert TTFTPercentile(50).score(0, 0, timings=t) == pytest.approx(0.4)
+    # only request 0 meets ttft<=0.2 and tpot<=0.1 -> goodput 0.5 req/s
+    g = GoodputUnderSLO(ttft_slo_s=0.2, tpot_slo_s=0.1)
+    assert g.score(0, 0, timings=t) == pytest.approx(-0.5)
+    # warm requests are exempt from the TTFT SLO
+    tw = _timings(ttft=[np.inf], tpot=[0.05], finished=[True], warm=[True],
+                  makespan=1.0)
+    assert g.score(0, 0, timings=tw) == pytest.approx(-1.0)
+
+
+def test_slo_objective_refuses_synthetic_timing():
+    t = _timings([0.1], [0.1], [True], [False], 1.0)
+    t.synthetic = True
+    with pytest.raises(ValueError, match="synthetic"):
+        TTFTPercentile(99).score(0, 0, timings=t)
+
+
+def test_search_mapping_rejects_mc_objective():
+    hw = make_hardware(64, "M", tensor_parallel=2)
+    batch = [prefill_request(32) for _ in range(2)]
+    with pytest.raises(ValueError, match="monetary cost"):
+        search_mapping(SPEC, [batch], hw, [2], GAConfig(population=4,
+                                                        generations=1),
+                       objective="edp_mc", n_blocks=1)
+
+
+def test_search_mapping_slo_objective_needs_rollout():
+    hw = make_hardware(64, "M", tensor_parallel=2)
+    batch = [prefill_request(32) for _ in range(2)]
+    with pytest.raises(ValueError, match="StreamRollout"):
+        search_mapping(SPEC, [batch], hw, [2], GAConfig(population=4,
+                                                        generations=1),
+                       objective="ttft_p99", n_blocks=1)
+
+
+def test_hardware_objective_slo_refuses_legacy_scenario():
+    with pytest.warns(DeprecationWarning):
+        sc = Scenario("legacy", SPEC, target_tops=64, phase="prefill",
+                      trace=SHAREGPT, batch_size=2, n_batches=1, n_blocks=1)
+    p = random_point(np.random.default_rng(0), 64)
+    with pytest.raises(ValueError, match="synthetic|scheduler rollout"):
+        hardware_objective(sc, p, GAConfig(population=4, generations=1),
+                           objective="ttft_p99")
+
+
+def test_legacy_shim_matches_explicit_fixed_stream():
+    """Scenario(phase=..., trace=...) must score identically to the stream
+    it desugars to — the deprecation shim is a pure rewrite."""
+    with pytest.warns(DeprecationWarning):
+        legacy = Scenario("l", SPEC, target_tops=64, phase="prefill",
+                          trace=SHAREGPT, batch_size=4, n_batches=2,
+                          n_blocks=2, seed=7)
+    fixed = RequestStream.fixed_batches(
+        sample_batches(SHAREGPT, "prefill", 4, 2, seed=7))
+    modern = Scenario("m", SPEC, target_tops=64, stream=fixed, n_blocks=2)
+    p = random_point(np.random.default_rng(0), 64)
+    cfg = GAConfig(population=8, generations=2)
+    s_legacy, out_legacy = hardware_objective(legacy, p, cfg)
+    s_modern, out_modern = hardware_objective(modern, p, cfg)
+    assert s_legacy == s_modern
+    assert out_legacy.latency_s == out_modern.latency_s
+    assert out_legacy.energy_j == out_modern.energy_j
+
+
+def test_stream_objective_end_to_end_scoring():
+    """TTFT percentile through hardware_objective on a real rollout equals
+    re-pricing the rollout with the searched mapping's batch latencies."""
+    reqs = [StreamRequest(32, 2), StreamRequest(32, 2, arrival_iter=1)]
+    st = RequestStream.from_requests(reqs)
+    sc = Scenario("s", SPEC, target_tops=64, stream=st, scheduler="orca",
+                  objective="ttft_p99", n_blocks=1)
+    p = random_point(np.random.default_rng(1), 64)
+    score, out = hardware_objective(sc, p, GAConfig(population=8,
+                                                    generations=2))
+    ro = rollout(st, get_scheduler("orca"))
+    expect = TTFTPercentile(99).score(
+        0, 0, timings=ro.timings(out.batch_latencies))
+    assert score == pytest.approx(expect)
+    assert np.isfinite(score) and score > 0

@@ -152,3 +152,12 @@ def test_chunked_prefill_compiles_once_per_bucket():
     n_buckets = len({ServingEngine._bucket(n)
                      for n in range(1, 9)})          # chunks are <= 8 long
     assert eng._extend._cache_size() <= n_buckets
+
+
+def test_engine_rejects_warm_requests():
+    """Warm (pre-filled) requests are a pure-rollout modeling device — the
+    engine has no KV state for them and must refuse loudly."""
+    eng = ServingEngine(PARAMS, CFG, max_batch=2, max_len=64)
+    warm = ServeRequest(0, [1] * 8, 4, prefilled=8)
+    with pytest.raises(ValueError, match="warm"):
+        eng.run([warm], OrcaScheduler())

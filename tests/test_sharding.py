@@ -3,7 +3,6 @@ elastic mesh derivation, collective-bytes parser."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import all_archs

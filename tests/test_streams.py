@@ -1,0 +1,156 @@
+"""RequestStream rollout: scheduler parity vs the old strategy builders,
+pure plan-rollout bookkeeping, and per-request timing."""
+import numpy as np
+import pytest
+
+from repro.core.streams import (
+    RequestStream,
+    StreamRequest,
+    mixed_serving_stream,
+    rollout,
+)
+from repro.core.traces import SHAREGPT, TraceDistribution
+from repro.core.workload import DECODE, PREFILL, Request
+from repro.serving.scheduler import (
+    ChunkedPrefillScheduler,
+    ServeRequest,
+    get_scheduler,
+    plan_rollout,
+)
+
+SMALL = TraceDistribution("small", mean_input=48, mean_output=12, max_len=256)
+
+
+def _shapes(batch):
+    return [(r.kind, r.q_len, r.kv_len) for r in batch]
+
+
+# --------------------------------------------------------------------------
+# Request validation regression (operator-precedence bug)
+# --------------------------------------------------------------------------
+
+
+def test_decode_request_zero_qlen_rejected():
+    # `a and b or c` used to let any malformed DECODE request through
+    with pytest.raises(AssertionError):
+        Request(DECODE, 0, 5)
+    with pytest.raises(AssertionError):
+        Request(DECODE, -1, 5)
+    with pytest.raises(AssertionError):
+        Request(PREFILL, 8, 4)          # prefill must attend >= q_len
+    Request(DECODE, 1, 5)               # valid decode snapshot
+    Request(PREFILL, 8, 8)              # valid prefill
+
+
+# --------------------------------------------------------------------------
+# Golden parity vs the deleted traces.STRATEGIES builders (§VI-F, Fig. 9)
+# --------------------------------------------------------------------------
+
+
+def test_vllm_rollout_matches_golden():
+    # old: vllm_strategy(4096, 500, 16, 3)
+    ro = rollout(mixed_serving_stream(4096, 500, 16, 3),
+                 get_scheduler("vllm"), max_slots=17)
+    assert len(ro.batches) == 4
+    assert _shapes(ro.batches[0]) == [(PREFILL, 4096, 4096)]
+    for i, b in enumerate(ro.batches[1:]):
+        assert _shapes(b) == [(DECODE, 1, 500 + i)] * 16
+
+
+def test_orca_rollout_matches_golden():
+    # old: orca_strategy(4096, 500, 16, 3)
+    ro = rollout(mixed_serving_stream(4096, 500, 16, 3),
+                 get_scheduler("orca"), max_slots=17)
+    assert len(ro.batches) == 3
+    assert _shapes(ro.batches[0]) == ([(PREFILL, 4096, 4096)]
+                                      + [(DECODE, 1, 500)] * 16)
+    for i, b in enumerate(ro.batches[1:], start=1):
+        assert _shapes(b) == [(DECODE, 1, 500 + i)] * 16
+
+
+def test_chunked_prefill_rollout_matches_golden():
+    # old: chunked_prefill_strategy(4096, 500, 16, 4, chunk=1024)
+    ro = rollout(mixed_serving_stream(4096, 500, 16, 4),
+                 ChunkedPrefillScheduler(chunk=1024), max_slots=17)
+    assert len(ro.batches) == 4
+    for ci, b in enumerate(ro.batches):
+        assert _shapes(b) == ([(PREFILL, 1024, 1024 * (ci + 1))]
+                              + [(DECODE, 1, 500 + ci)] * 16)
+    pf = [r for b in ro.batches for r in b if r.kind == PREFILL]
+    assert sum(r.q_len for r in pf) == 4096  # chunks cover the prompt
+
+
+# --------------------------------------------------------------------------
+# Pure plan-rollout bookkeeping
+# --------------------------------------------------------------------------
+
+
+def test_plan_rollout_arrival_gating_and_fast_forward():
+    reqs = [ServeRequest(0, [0] * 4, 2, arrived_iter=10)]
+    plans = list(plan_rollout(reqs, get_scheduler("vllm"), max_slots=1))
+    # idle gap skipped in O(1): first executed iteration is the arrival
+    assert plans[0][0] == 10
+    assert reqs[0].first_token_iter == 10
+    assert reqs[0].done_iter == 11     # 1 decode after the prefill token
+    assert reqs[0].slot is None        # slot released on retirement
+
+
+def test_plan_rollout_respects_slot_limit():
+    reqs = [ServeRequest(i, [0] * 4, 1) for i in range(3)]
+    plans = list(plan_rollout(reqs, get_scheduler("vllm"), max_slots=1))
+    # one slot: requests are served strictly one at a time
+    assert all(len(p.prefill) + len(p.decode) == 1 for _, p in plans)
+    assert all(r.finished for r in reqs)
+
+
+def test_stream_sampling_deterministic_and_warm_mix():
+    st = RequestStream("s", trace=SHAREGPT, rate=0.5, n_requests=32,
+                       warm_fraction=0.5, seed=3)
+    a, b = st.sample(), st.sample()
+    assert a == b
+    warm = [r for r in a if r.warm]
+    assert 0 < len(warm) < 32
+    assert all(r.warm_context > 0 for r in warm)
+    arrivals = [r.arrival_iter for r in a]
+    assert arrivals == sorted(arrivals) and arrivals[-1] > 0
+
+
+def test_deterministic_arrivals():
+    st = RequestStream("s", trace=SMALL, arrival="deterministic", rate=0.5,
+                       n_requests=4, seed=0)
+    assert [r.arrival_iter for r in st.sample()] == [0, 2, 4, 6]
+
+
+def test_rollout_timings_math():
+    # 2 cold requests arriving back to back, 1 slot, vllm separation:
+    # it0 prefill A (first token), it1 prefill B?  no — B waits for A's slot
+    reqs = [StreamRequest(4, 2, arrival_iter=0),
+            StreamRequest(4, 2, arrival_iter=0)]
+    ro = rollout(RequestStream.from_requests(reqs), get_scheduler("vllm"),
+                 max_slots=1)
+    t = ro.timings(np.ones(len(ro.batches)))
+    # A: prefill at batch 0 -> ttft 1; B: waits until A retires
+    assert t.ttft_s[0] == pytest.approx(1.0)
+    assert t.ttft_s[1] > t.ttft_s[0]
+    assert np.all(t.finished)
+    assert t.makespan_s == pytest.approx(float(len(ro.batches)))
+    # tpot: 2 tokens each -> one decode step between first and done
+    assert t.tpot_s[0] == pytest.approx(1.0)
+
+
+def test_rollout_horizon_marks_unfinished():
+    reqs = [StreamRequest(4, 50)]
+    ro = rollout(RequestStream.from_requests(reqs), get_scheduler("orca"),
+                 max_slots=1, max_iters=5)
+    t = ro.timings(np.ones(len(ro.batches)))
+    assert not t.finished[0]
+    assert np.isinf(t.tpot_s[0])
+    assert np.isfinite(t.ttft_s[0])    # first token was served in-horizon
+
+
+def test_fixed_stream_rollout_is_synthetic():
+    batches = [[Request(PREFILL, 8, 8)], [Request(DECODE, 1, 9)]]
+    ro = rollout(RequestStream.fixed_batches(batches))
+    assert ro.synthetic
+    assert ro.batches == batches
+    assert ro.timings(np.ones(2)).synthetic

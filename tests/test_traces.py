@@ -1,15 +1,15 @@
-"""Sequence-length traces + serving strategies."""
+"""Sequence-length traces and batch sampling. (Serving-strategy batch
+compositions moved to RequestStream + Scheduler — see test_streams.py.)"""
 import numpy as np
 
 from repro.core.traces import (
     GOVREPORT,
     SHAREGPT,
-    chunked_prefill_strategy,
+    ServingWorkload,
     decode_batch,
-    orca_strategy,
+    fixed_length_batch,
     prefill_batch,
     sample_batches,
-    vllm_strategy,
 )
 from repro.core.workload import DECODE, PREFILL
 
@@ -31,24 +31,16 @@ def test_batch_builders():
     assert all(r.kind == PREFILL and r.q_len == r.kv_len for r in pb)
     db = decode_batch(SHAREGPT, rng, 8)
     assert all(r.kind == DECODE and r.q_len == 1 for r in db)
-
-
-def test_strategies_structure():
-    v = vllm_strategy(4096, 500, 16, 3)
-    assert len(v.batches[0]) == 1 and v.batches[0][0].kind == PREFILL
-    assert all(r.kind == DECODE for r in v.batches[1])
-
-    o = orca_strategy(4096, 500, 16, 3)
-    kinds = {r.kind for r in o.batches[0]}
-    assert kinds == {PREFILL, DECODE}  # mixed first batch
-
-    c = chunked_prefill_strategy(4096, 500, 16, 4, chunk=1024)
-    pf = [r for b in c.batches for r in b if r.kind == PREFILL]
-    assert sum(r.q_len for r in pf) == 4096  # chunks cover the prompt
-    assert all(any(r.kind == DECODE for r in b) for b in c.batches)
+    fb = fixed_length_batch(PREFILL, 128, 4)
+    assert all(r.q_len == 128 for r in fb)
 
 
 def test_sampling_deterministic():
     a = sample_batches(SHAREGPT, PREFILL, 4, 2, seed=7)
     b = sample_batches(SHAREGPT, PREFILL, 4, 2, seed=7)
     assert [[r for r in x] for x in a] == [[r for r in x] for x in b]
+
+
+def test_serving_workload_container():
+    wl = ServingWorkload("w", sample_batches(SHAREGPT, PREFILL, 4, 2, seed=0))
+    assert wl.n_requests() == 8

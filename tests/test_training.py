@@ -12,7 +12,7 @@ from repro.configs import all_archs
 from repro.dist.compression import compress_grads, decompress_grads, roundtrip
 from repro.training import checkpoint as ckpt
 from repro.training.data import DataConfig, TokenStream
-from repro.training.optimizer import AdamWConfig, adamw_init, lr_schedule
+from repro.training.optimizer import AdamWConfig, lr_schedule
 from repro.training.train_loop import TrainConfig, train
 
 CFG = all_archs()["qwen1.5-0.5b"].reduced()
