@@ -31,14 +31,21 @@ import numpy as np
 
 from ..serving.scheduler import Scheduler, get_scheduler
 from .bo import BOResult, HardwarePoint, bo_search
-from .encoding import MappingEncoding, as_stacked
-from .evaluator import CostTables, EvalResult, evaluate
+from .encoding import MappingEncoding, as_stacked, pipeline_parallel
+from .evaluator import EvalResult, evaluate
 from .ga import GAConfig, GAResult, ga_search
 from .hardware import HardwareConfig, monetary_cost
 from .objectives import Objective, get_objective
 from .streams import RequestStream, StreamRollout, rollout as roll_stream
+from .timing import (
+    OracleTimingBackend,
+    TimingBackend,
+    fold_request_timings,
+    get_graph_and_tables,
+    resolve_timing_backend,
+)
 from .traces import ServingWorkload, TraceDistribution, sample_batches
-from .workload import DECODE, PREFILL, LLMSpec, Request, build_execution_graph
+from .workload import DECODE, PREFILL, LLMSpec, Request
 
 
 @dataclass
@@ -73,6 +80,7 @@ class Scenario:
     stream: RequestStream | None = None
     scheduler: Scheduler | str = "orca"
     objective: Objective | str | None = None  # default for explore()
+    timing_backend: "TimingBackend | str | None" = None  # oracle|dense|pallas
     max_slots: int | None = None              # engine slots for the rollout
     max_stream_iters: int = 128               # rollout horizon (iterations)
     _rollout: StreamRollout | None = field(
@@ -109,6 +117,12 @@ class Scenario:
                            ) -> Objective:
         return get_objective(self.objective if self.objective is not None
                              else default)
+
+    def resolved_backend(self) -> "TimingBackend":
+        """The scenario's timing backend (``timing_backend=`` field >
+        ``REPRO_TIMING_BACKEND`` env > ``dense``), with the off-TPU
+        ``pallas`` -> ``dense`` fallback applied."""
+        return resolve_timing_backend(self.timing_backend)
 
     def rollout(self) -> StreamRollout:
         """The scenario's workload as per-iteration batches (cached: the
@@ -159,15 +173,29 @@ def search_mapping(
     n_blocks: int | None = None,
     use_jax: bool | None = None,
     stream_rollout: StreamRollout | None = None,
+    timing_backend: "TimingBackend | str | None" = None,
 ) -> MappingSearchOutput:
     """GA mapping search shared across structurally-identical batches.
 
     ``objective`` must be MC-free (``uses_mc=False``): monetary cost is
     constant for a fixed hardware config, so an MC-bearing objective here
     would silently degenerate — pass ``objective.inner()`` and apply the
-    full objective at the hardware level. SLO-aware objectives need
-    ``stream_rollout`` (whose ``batches`` must be the ones passed in) to
-    price per-request timing for the returned ``score``.
+    full objective at the hardware level.
+
+    SLO-aware (``requires_stream``) objectives need ``stream_rollout``
+    (whose ``batches`` must be the ones passed in) and are ranked on TRUE
+    per-request timings inside the GA: each candidate's per-batch
+    latencies are spliced into the rollout's full latency vector (batches
+    owned by *other* structure groups use the best latency known so far —
+    seeded from a pipeline-parallel mapping, tightened group by group) and
+    folded into per-request TTFT/TPOT on device, so the GA can trade
+    prefill vs decode iterations instead of minimising a total-latency
+    surrogate.
+
+    Execution graphs and cost tables come from the persistent
+    ``repro.core.timing`` cache — a second search on the same scenario
+    rebuilds neither, and the device-resident stacked table buffers are
+    reused across generations and calls.
     """
     obj = get_objective(objective)
     if obj.uses_mc:
@@ -180,31 +208,62 @@ def search_mapping(
         raise ValueError(
             f"objective {obj.name!r} needs the scenario's StreamRollout to "
             "price per-request timing; pass stream_rollout=")
+    if obj.requires_stream and stream_rollout.synthetic:
+        raise ValueError(
+            f"objective {obj.name!r} cannot drive the mapping GA on a "
+            "fixed-batch (synthetic) rollout; use a RequestStream + "
+            "scheduler")
     ga_config = ga_config or GAConfig()
     # group batches by execution-graph structure
     groups: dict[tuple, list[int]] = {}
     graphs, tables = [], []
     for i, (batch, mb) in enumerate(zip(batches, micro_batches)):
-        g = build_execution_graph(spec, batch, mb, tp=hw.tensor_parallel,
-                                  n_blocks=n_blocks)
+        g, t = get_graph_and_tables(spec, batch, hw, mb, n_blocks)
         graphs.append(g)
-        tables.append(CostTables.build(g, hw))
+        tables.append(t)
         key = (g.rows, g.n_cols)
         groups.setdefault(key, []).append(i)
+
+    # all structurally-identical batches of a group are evaluated in ONE
+    # jitted call per generation (vmap over batches x population)
+    group_evals = {
+        key: _make_population_eval([graphs[i] for i in idxs],
+                                   [tables[i] for i in idxs], hw, use_jax,
+                                   timing_backend)
+        for key, idxs in groups.items()
+    }
+
+    stream_fitness = obj.requires_stream
+    base_lat = None
+    if stream_fitness:
+        # best-known per-batch latencies for splicing: seeded from the
+        # pipeline-parallel paradigm, updated after each group's search
+        base_lat = np.zeros(len(batches))
+        for key, idxs in groups.items():
+            rows, m_cols = key
+            seed_lat, _ = group_evals[key]([
+                pipeline_parallel(rows, m_cols, hw.n_chiplets)])
+            base_lat[idxs] = np.asarray(seed_lat)[:, 0]
 
     encodings: dict[tuple, MappingEncoding] = {}
     ga_results: list[GAResult] = []
     per_batch: list[EvalResult | None] = [None] * len(graphs)
     for key, idxs in groups.items():
         rows, m_cols = key
-        # all structurally-identical batches of the group are evaluated in
-        # ONE jitted call per generation (vmap over batches x population)
-        group_eval = _make_population_eval(
-            [graphs[i] for i in idxs], [tables[i] for i in idxs], hw, use_jax)
+        group_eval = group_evals[key]
 
-        def eval_fn(pop, group_eval=group_eval):
-            lat, en = group_eval(pop)                       # (B, P)
-            return obj.ga_fitness(np.asarray(lat), np.asarray(en))
+        if stream_fitness:
+            def eval_fn(pop, group_eval=group_eval, idxs=idxs):
+                lat, _ = group_eval(pop)                    # (B, P)
+                lat = np.asarray(lat)
+                full = np.repeat(base_lat[None, :], lat.shape[1], axis=0)
+                full[:, idxs] = lat.T                       # (P, n_batches)
+                timings = fold_request_timings(stream_rollout, full)
+                return np.asarray(obj.score_timings(timings), dtype=float)
+        else:
+            def eval_fn(pop, group_eval=group_eval):
+                lat, en = group_eval(pop)                   # (B, P)
+                return obj.ga_fitness(np.asarray(lat), np.asarray(en))
 
         eval_fn.accepts_stacked = True
         res = ga_search(eval_fn, rows, m_cols, hw.n_chiplets, ga_config)
@@ -212,6 +271,8 @@ def search_mapping(
         ga_results.append(res)
         for i in idxs:
             per_batch[i] = evaluate(graphs[i], res.best, hw, tables[i])
+        if stream_fitness:
+            base_lat[idxs] = [per_batch[i].latency_s for i in idxs]
 
     lat = float(sum(r.latency_s for r in per_batch))
     en = float(sum(r.energy_j for r in per_batch))
@@ -227,19 +288,26 @@ def search_mapping(
     )
 
 
-def _make_population_eval(graphs, tables, hw, use_jax: bool | None):
+def _make_population_eval(graphs, tables, hw, use_jax: bool | None,
+                          timing_backend=None):
     """Returns eval(population) -> ((B, P) latency_s, (B, P) energy_j) over
     the group's batches.
 
-    Uses the JAX group evaluator when available (one jitted call per GA
-    generation for ALL batches of the group); ``use_jax=True`` raises on any
-    failure, ``use_jax=None`` warns — loudly, a silent numpy fallback is an
-    order-of-magnitude GA slowdown — and degrades to the numpy oracle."""
-    if use_jax is None or use_jax:
+    ``timing_backend`` selects the pass-B engine (``oracle`` routes to the
+    pure-numpy evaluator directly — explicit, so no fallback warning).
+    Otherwise the JAX group evaluator is used when available (one jitted
+    call per GA generation for ALL batches of the group); ``use_jax=True``
+    raises on any failure, ``use_jax=None`` warns — loudly, a silent numpy
+    fallback is an order-of-magnitude GA slowdown — and degrades to the
+    numpy oracle."""
+    backend = resolve_timing_backend(timing_backend)
+    oracle = isinstance(backend, OracleTimingBackend)
+    if not oracle and (use_jax is None or use_jax):
         try:
             from . import jax_evaluator
 
-            ge = jax_evaluator.GroupPopulationEvaluator(graphs, tables, hw)
+            ge = jax_evaluator.GroupPopulationEvaluator(graphs, tables, hw,
+                                                        backend=backend)
             return ge.evaluate_population
         except Exception as e:
             if use_jax:
@@ -294,10 +362,11 @@ def hardware_objective(
     ga_config: GAConfig | None = None,
     objective: Objective | str | None = None,
     use_jax: bool | None = None,
+    timing_backend: "TimingBackend | str | None" = None,
 ) -> tuple[float, MappingSearchOutput]:
     """Fitness of one hardware point: mapping search under the scenario's
     rollout, scored by ``objective`` (default: the scenario's, else
-    EDP·MC)."""
+    EDP·MC). ``timing_backend`` overrides the scenario's."""
     obj = scenario.resolved_objective() if objective is None \
         else get_objective(objective)
     hw = point.to_config(scenario.target_tops)
@@ -309,10 +378,13 @@ def hardware_objective(
             "(the legacy phase/trace/workload shim has synthetic timing)")
     batches = ro.batches
     mbs = [scenario.micro_batch(hw, b) for b in batches]
+    backend = scenario.resolved_backend() if timing_backend is None \
+        else resolve_timing_backend(timing_backend)
     out = search_mapping(scenario.spec, batches, hw, mbs, ga_config,
                          objective=obj.inner(), n_blocks=scenario.n_blocks,
                          use_jax=use_jax,
-                         stream_rollout=None if ro.synthetic else ro)
+                         stream_rollout=None if ro.synthetic else ro,
+                         timing_backend=backend)
     score = scenario_score(scenario, obj, out.latency_s, out.energy_j,
                            out.mc_total, out.batch_latencies)
     return score, out
@@ -326,13 +398,15 @@ def explore(
     objective: Objective | str | None = None,
     seed: int = 0,
     use_jax: bool | None = None,
+    timing_backend: "TimingBackend | str | None" = None,
 ) -> CompassResult:
     """Full Compass loop (Eq. 1): BO over hardware, GA over mappings, the
     scenario's stream rolled out under its scheduler as the workload.
 
     The single declarative entry point: everything workload-related lives
-    on the ``Scenario`` (``stream=``, ``scheduler=``, ``objective=``);
-    ``objective`` here overrides the scenario's default when given.
+    on the ``Scenario`` (``stream=``, ``scheduler=``, ``objective=``,
+    ``timing_backend=``); ``objective``/``timing_backend`` here override
+    the scenario's defaults when given.
     """
     cache: dict[tuple, tuple[float, MappingSearchOutput]] = {}
 
@@ -340,7 +414,8 @@ def explore(
         key = point.key()
         if key not in cache:
             cache[key] = hardware_objective(scenario, point, ga_config,
-                                            objective, use_jax)
+                                            objective, use_jax,
+                                            timing_backend)
         return cache[key][0]
 
     bo = bo_search(obj, scenario.target_tops, iters=bo_iters,

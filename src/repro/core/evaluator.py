@@ -9,7 +9,11 @@ Two passes over the scheduled order:
    ``T_start = max(chip-available, predecessors-done)`` (paper's equations).
 
 This module is the *numpy oracle*; ``jax_evaluator`` reproduces it exactly
-(tested) and evaluates whole GA populations in one jitted call.
+(tested) and evaluates whole GA populations in one jitted call. The
+timing recurrence (pass B) is delegated to a pluggable
+``repro.core.timing`` backend — ``oracle`` (numpy, the default here),
+``dense`` (lax.scan) or ``pallas`` (TPU kernel) — all consuming the same
+padded predecessor-position layout and returning the full timing matrix.
 """
 from __future__ import annotations
 
@@ -29,7 +33,20 @@ from .hardware import (
     HardwareConfig,
     monetary_cost,
 )
+from .timing import (
+    OracleTimingBackend,
+    padded_predecessor_columns,
+    padded_predecessor_positions,
+)
 from .workload import ExecutionGraph
+
+_BUILD_COUNT = 0
+
+
+def cost_tables_build_count() -> int:
+    """Process-lifetime count of ``CostTables.build`` calls — used to
+    assert the persistent cost-table cache actually skips rebuilds."""
+    return _BUILD_COUNT
 
 
 @dataclass
@@ -60,6 +77,8 @@ class CostTables:
         (row, col, dataflow) with ``bincount``. Semantics match
         ``build_reference`` (the original (rows x M x D) Python loop, kept
         for the equivalence test) to float round-off."""
+        global _BUILD_COUNT
+        _BUILD_COUNT += 1
         rows, m_cols, d = graph.rows, graph.n_cols, len(DATAFLOWS)
         n_ops = rows * m_cols
         spec = hw.spec
@@ -268,7 +287,12 @@ def evaluate(
     enc: MappingEncoding,
     hw: HardwareConfig,
     tables: CostTables | None = None,
+    backend=None,
 ) -> EvalResult:
+    """Reference single-mapping evaluation. ``backend`` routes the timing
+    recurrence (pass B) through any ``repro.core.timing.TimingBackend``
+    (default: the numpy oracle) — the shared parity suite runs this very
+    function under all three backends."""
     if tables is None:
         tables = CostTables.build(graph, hw)
     flags = data_access_flags(graph, enc, hw)
@@ -305,17 +329,18 @@ def evaluate(
 
     t_proc = np.maximum(comp_s, np.maximum(t_dram, t_nop))
 
-    # schedule simulation
-    chip_free = np.zeros(hw.n_chiplets)
+    # schedule simulation (pass B): padded predecessor-position layout
+    # through a pluggable timing backend — numpy oracle by default
+    order = enc.scheduled_order()
+    b_seq, l_seq = order[:, 0], order[:, 1]
+    pred_cols, pred_valid = padded_predecessor_columns(tables.pred_lo,
+                                                       tables.pred_hi)
+    ppos = padded_predecessor_positions(order, pred_cols, pred_valid)
+    be = OracleTimingBackend() if backend is None else backend
+    tm = be.timing_matrix(t_proc[b_seq, l_seq][None], l2c[b_seq, l_seq][None],
+                          ppos[None], hw.n_chiplets)
     end = np.zeros((rows, m_cols))
-    plo, phi = tables.pred_lo, tables.pred_hi
-    for b, l in enc.scheduled_order():
-        chip = l2c[b, l]
-        start = chip_free[chip]
-        if plo[l] >= 0:
-            start = max(start, end[b, plo[l]:phi[l]].max())
-        end[b, l] = start + t_proc[b, l]
-        chip_free[chip] = end[b, l]
+    end[b_seq, l_seq] = tm.op_end_s[0]
 
     scale = graph.scale
     latency = float(end.max()) * scale

@@ -9,13 +9,19 @@ evaluated in one jitted call, structured as:
   status table "last (row, col) executed on chip c before step t" is a
   prefix-max over the schedule, so weight-residency / liveness / write-out
   flags become pure gathers with no sequential dependency;
-* **cost contraction** (per batch x individual): the (rows, M, M) liveness
-  masks contract with the per-batch byte tables into NoP/DRAM traffic and
-  ``T_proc``;
-* **timing pass** (per batch x individual): the only truly sequential part
-  — the makespan recurrence — as a ``lax.scan`` in schedule order with
-  padded predecessor-position gathers (state is a (T,) end vector + (C,)
-  chip-free vector, not the full (rows, M) matrix).
+* **cost contraction** (per batch x individual): the padded predecessor
+  liveness masks contract with the per-batch byte tables into NoP/DRAM
+  traffic, per-op ``T_proc`` and energy;
+* **timing pass B** (per batch x individual): the only truly sequential
+  part — the makespan recurrence — delegated to a pluggable
+  :mod:`repro.core.timing` backend: ``dense`` (batched ``lax.scan``, the
+  XLA default) or ``pallas`` (``repro.kernels.mapping_eval``, the
+  VMEM-resident TPU kernel over a (batches, population) grid; interpreted
+  on CPU when asked). Both consume the same padded predecessor-position
+  layout the structural pass emits, and both return the full timing
+  matrix (per-op end times + per-chiplet free times), which
+  ``GroupPopulationEvaluator`` folds into per-request timings for the
+  SLO-aware GA objectives.
 
 Semantics match ``evaluator.evaluate`` exactly (tested to 1e-6).
 
@@ -26,11 +32,10 @@ generation is ONE jitted call). Both are module-level ``jax.jit`` functions,
 so the compile cache is keyed on shapes only: repeated BO iterations with
 the same (rows, M, C) never recompile. Scheduled orders come from
 ``encoding.ScheduledOrderCache`` — per-individual Python loops never run
-when the segmentation is unchanged.
-
-A Pallas TPU kernel with the same tiling structure lives in
-``repro.kernels.mapping_eval`` for the timing recurrence; this module is the
-pure-JAX (XLA) path and the default.
+when the segmentation is unchanged. Per-batch cost tables are uploaded
+once per distinct table set (module-level keyed cache) and the device
+buffers persist across GA generations AND across ``search_mapping`` calls
+on the same scenario.
 """
 from __future__ import annotations
 
@@ -50,17 +55,24 @@ from .hardware import (
     E_NOP_PJ_PER_BYTE_HOP,
     HardwareConfig,
 )
+from .timing import (
+    OracleTimingBackend,
+    PallasTimingBackend,
+    TimingBackend,
+    TimingMatrix,
+    dense_pass_b,
+    padded_predecessor_columns,
+    resolve_timing_backend,
+)
 from .workload import ExecutionGraph
 
 available = True
-
-_SCAN_UNROLL = 8
 
 
 def _structural_pass(order, lc, n_succ, hops, pred_cols, pred_valid,
                      n_chips: int):
     """Mapping-only quantities for one individual: Algorithm-2 flags as
-    dense gathers plus the schedule-order index tensors the timing scan
+    dense gathers plus the schedule-order index tensors the timing pass
     needs. Predecessors are contiguous column intervals of width <= W, so
     everything stays on narrow (rows, M, W) tensors indexed by
     ``pred_cols`` instead of dense (rows, M, M). Returns a dict of arrays."""
@@ -109,7 +121,8 @@ def _structural_pass(order, lc, n_succ, hops, pred_cols, pred_valid,
     write_out = (n_succ[None, :] - consumed > 0) | (n_succ[None, :] == 0)
 
     # padded predecessor positions per schedule step (sentinel T -> the
-    # zero slot of the end vector, matching the oracle's max(..., 0))
+    # zero slot of the end vector, matching the oracle's max(..., 0)) —
+    # the layout every timing backend consumes
     ppos = jnp.where(pred_valid[l_seq],                   # (T, W)
                      ppos_mat[b_seq, l_seq], T)
 
@@ -118,11 +131,11 @@ def _structural_pass(order, lc, n_succ, hops, pred_cols, pred_valid,
                 b_seq=b_seq, l_seq=l_seq, ppos=ppos)
 
 
-def _batch_pass(struct, lc, pred_cols, dram_hops, flow_of_chip, ws_resident,
-                out_bytes, comp_s, comp_e, weight_b, psum_b, output_b, rr,
-                stream_b, extra_w, dram_bw, nop_bw, n_chips: int):
-    """Costs + timing for one (batch, individual) pair given the
-    individual's structural pass output."""
+def _cost_pass(struct, lc, pred_cols, dram_hops, flow_of_chip, ws_resident,
+               out_bytes, comp_s, comp_e, weight_b, psum_b, output_b, rr,
+               stream_b, extra_w, dram_bw, nop_bw):
+    """Per-op ``T_proc`` (in scheduled order) + total energy for one
+    (batch, individual) pair given the individual's structural pass."""
     rows, m_cols = lc.shape
     ws_idx = DATAFLOWS.index("WS")
 
@@ -156,26 +169,21 @@ def _batch_pass(struct, lc, pred_cols, dram_hops, flow_of_chip, ws_resident,
         * E_NOP_PJ_PER_BYTE_HOP
     energy_pj = jnp.sum(cene) + e_dram + e_nop
 
-    # ------------------------------------------------ timing recurrence
-    T = struct["chip_seq"].shape[0]
     tproc_sched = t_proc[struct["b_seq"], struct["l_seq"]]  # (T,)
+    return tproc_sched, energy_pj
 
-    def time_step(carry, xs):
-        chip_free, end_sched = carry
-        t, chip, ppos, tp = xs
-        pred_end = jnp.max(end_sched[ppos])
-        start = jnp.maximum(chip_free[chip], pred_end)
-        fin = start + tp
-        return (chip_free.at[chip].set(fin),
-                end_sched.at[t].set(fin)), None
 
-    (chip_free, end_sched), _ = jax.lax.scan(
-        time_step,
-        (jnp.zeros((n_chips,)), jnp.zeros((T + 1,))),
-        (jnp.arange(T, dtype=jnp.int32), struct["chip_seq"], struct["ppos"],
-         tproc_sched),
-        unroll=min(_SCAN_UNROLL, T))
-    return jnp.max(end_sched), energy_pj
+def _pass_b(tproc, chip_seq, ppos, n_chips: int, backend: str,
+            interpret: bool):
+    """Backend-dispatched timing recurrence: tproc (B, P, T), chip_seq
+    (P, T), ppos (P, T, W) -> (end (B, P, T), chip_free (B, P, C))."""
+    if backend == "pallas":
+        from ..kernels.mapping_eval import mapping_eval
+
+        return mapping_eval(tproc, chip_seq, ppos, n_chips,
+                            interpret=interpret)
+    per_p = jax.vmap(lambda tp, c, pp: dense_pass_b(tp, c, pp, n_chips))
+    return jax.vmap(lambda tp: per_p(tp, chip_seq, ppos))(tproc)
 
 
 def _population_pass_impl(
@@ -200,20 +208,30 @@ def _population_pass_impl(
     dram_bw,       # ()
     nop_bw,        # ()
     n_chips: int,
+    backend: str = "dense",
+    interpret: bool = False,
+    full: bool = False,
 ):
     struct = jax.vmap(
         lambda o, lc: _structural_pass(o, lc, n_succ, hops, pred_cols,
                                        pred_valid, n_chips)
     )(order_rc, l2c)
-    return jax.vmap(
-        lambda s, lc: _batch_pass(s, lc, pred_cols, dram_hops, flow_of_chip,
-                                  ws_resident, out_bytes, comp_s, comp_e,
-                                  weight_b, psum_b, output_b, rr, stream_b,
-                                  extra_w, dram_bw, nop_bw, n_chips)
-    )(struct, l2c)
+    tproc, energy = jax.vmap(
+        lambda s, lc: _cost_pass(s, lc, pred_cols, dram_hops, flow_of_chip,
+                                 ws_resident, out_bytes, comp_s, comp_e,
+                                 weight_b, psum_b, output_b, rr, stream_b,
+                                 extra_w, dram_bw, nop_bw)
+    )(struct, l2c)                                        # (P, T), (P,)
+    end, free = _pass_b(tproc[None], struct["chip_seq"], struct["ppos"],
+                        n_chips, backend, interpret)
+    lat = jnp.max(end[0], axis=-1)
+    if full:        # the O(P*T) matrices leave the device only on request
+        return lat, energy, end[0], free[0], tproc
+    return lat, energy
 
 
-_population_pass = partial(jax.jit, static_argnames=("n_chips",))(
+_population_pass = partial(
+    jax.jit, static_argnames=("n_chips", "backend", "interpret", "full"))(
     _population_pass_impl)
 
 
@@ -227,6 +245,9 @@ def _grouped_population_pass_impl(
     stream_b, extra_w,                                # (B, rows, M)
     dram_bw, nop_bw,
     n_chips: int,
+    backend: str = "dense",
+    interpret: bool = False,
+    full: bool = False,
 ):
     # structural pass once per individual — shared across the group's
     # batches (it depends on the mapping only, not the byte tables)
@@ -237,25 +258,32 @@ def _grouped_population_pass_impl(
 
     def per_batch(ws_r, ob, cs, ce, wb, pb, o_b, rr_b, sb, ew):
         return jax.vmap(
-            lambda s, lc: _batch_pass(s, lc, pred_cols, dram_hops,
-                                      flow_of_chip, ws_r, ob, cs, ce, wb,
-                                      pb, o_b, rr_b, sb, ew, dram_bw,
-                                      nop_bw, n_chips)
+            lambda s, lc: _cost_pass(s, lc, pred_cols, dram_hops,
+                                     flow_of_chip, ws_r, ob, cs, ce, wb,
+                                     pb, o_b, rr_b, sb, ew, dram_bw, nop_bw)
         )(struct, l2c)
 
-    return jax.vmap(per_batch)(ws_resident, out_bytes, comp_s, comp_e,
-                               weight_b, psum_b, output_b, rr, stream_b,
-                               extra_w)
+    tproc, energy = jax.vmap(per_batch)(
+        ws_resident, out_bytes, comp_s, comp_e, weight_b, psum_b, output_b,
+        rr, stream_b, extra_w)                            # (B, P, T), (B, P)
+    end, free = _pass_b(tproc, struct["chip_seq"], struct["ppos"],
+                        n_chips, backend, interpret)
+    lat = jnp.max(end, axis=-1)
+    if full:        # the O(B*P*T) matrices leave the device only on request
+        return lat, energy, end, free, tproc
+    return lat, energy
 
 
-_grouped_population_pass = partial(jax.jit, static_argnames=("n_chips",))(
+_grouped_population_pass = partial(
+    jax.jit, static_argnames=("n_chips", "backend", "interpret", "full"))(
     _grouped_population_pass_impl)
 
 
 def jit_cache_sizes() -> dict:
     """Compile-cache sizes of the two jitted entry points — one entry per
-    distinct (P, T, rows, M, C[, B]) shape across the process lifetime.
-    Used by tests/benchmarks to assert nothing retraces per generation."""
+    distinct (P, T, rows, M, C[, B], backend) key across the process
+    lifetime. Used by tests/benchmarks to assert nothing retraces per
+    generation."""
     return {
         "population_pass": int(_population_pass._cache_size()),
         "grouped_population_pass": int(_grouped_population_pass._cache_size()),
@@ -263,22 +291,12 @@ def jit_cache_sizes() -> dict:
 
 
 def _shared_statics(graph: ExecutionGraph, hw: HardwareConfig) -> dict:
+    pred_cols, pred_valid = padded_predecessor_columns(
+        [m.pred_lo for m in graph.layers], [m.pred_hi for m in graph.layers])
     m_cols = graph.n_cols
-    pm = np.zeros((m_cols, m_cols), dtype=bool)
-    for l, meta in enumerate(graph.layers):
-        if meta.pred_lo >= 0:
-            pm[l, meta.pred_lo:meta.pred_hi] = True
-    n_succ = pm.sum(axis=0).astype(np.int32)
-    widths = [max(0, meta.pred_hi - meta.pred_lo) if meta.pred_lo >= 0 else 0
-              for meta in graph.layers]
-    w = max(widths + [1])
-    pred_cols = np.zeros((m_cols, w), dtype=np.int32)
-    pred_valid = np.zeros((m_cols, w), dtype=bool)
-    for l, meta in enumerate(graph.layers):
-        if meta.pred_lo >= 0:
-            n = meta.pred_hi - meta.pred_lo
-            pred_cols[l, :n] = np.arange(meta.pred_lo, meta.pred_hi)
-            pred_valid[l, :n] = True
+    n_succ = np.zeros(m_cols, dtype=np.int32)
+    for l in range(m_cols):
+        n_succ[pred_cols[l][pred_valid[l]]] += 1
     C = hw.n_chiplets
     hops = np.zeros((C, C), dtype=np.float32)
     for a in range(C):
@@ -313,6 +331,61 @@ def _table_arrays(t: CostTables) -> dict:
     )
 
 
+# --------------------------------------------------------------------------
+# Persistent device-resident table buffers
+#
+# The stacked (B, rows, M, D) table tensors are the heaviest host->device
+# upload of a search; they depend only on the CostTables identity, so one
+# keyed cache pins them on device across GA generations, across
+# search_mapping calls on the same scenario, and across evaluator
+# instances. Keys are object ids; the cache holds the tables themselves so
+# a live entry's ids can never be recycled.
+# --------------------------------------------------------------------------
+
+_DEVICE_TABLE_CACHE: dict = {}
+_DEVICE_CACHE_CAPACITY = 64
+_DEVICE_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _stacked_device_tables(tables: "tuple[CostTables, ...]") -> dict:
+    key = tuple(id(t) for t in tables)
+    hit = _DEVICE_TABLE_CACHE.get(key)
+    if hit is not None:
+        _DEVICE_CACHE_STATS["hits"] += 1
+        return hit[1]
+    _DEVICE_CACHE_STATS["misses"] += 1
+    if len(_DEVICE_TABLE_CACHE) >= _DEVICE_CACHE_CAPACITY:
+        _DEVICE_TABLE_CACHE.pop(next(iter(_DEVICE_TABLE_CACHE)))  # FIFO
+    per_batch = [_table_arrays(t) for t in tables]
+    if len(tables) == 1:
+        stacked = {k: jnp.asarray(per_batch[0][k]) for k in per_batch[0]}
+    else:
+        stacked = {
+            k: jnp.asarray(np.stack([arrs[k] for arrs in per_batch]))
+            for k in per_batch[0]
+        }
+    _DEVICE_TABLE_CACHE[key] = (tables, stacked)
+    return stacked
+
+
+def device_table_cache_stats() -> dict:
+    return dict(_DEVICE_CACHE_STATS, entries=len(_DEVICE_TABLE_CACHE))
+
+
+def _resolve_jax_backend(backend) -> tuple[str, bool]:
+    """(name, interpret) statics for the jitted passes; the oracle backend
+    has no jitted path — compass routes it to the numpy evaluator."""
+    be = resolve_timing_backend(backend)
+    if isinstance(be, OracleTimingBackend):
+        raise ValueError(
+            "the 'oracle' timing backend is the pure-numpy reference path; "
+            "use evaluator.evaluate / compass(use_jax=False) instead of the "
+            "population evaluators")
+    if isinstance(be, PallasTimingBackend):
+        return "pallas", bool(be._interpret())
+    return "dense", False
+
+
 @dataclass
 class PopulationEvaluator:
     """Evaluates GA populations on-device; matches the numpy oracle."""
@@ -320,42 +393,60 @@ class PopulationEvaluator:
     graph: ExecutionGraph
     tables: CostTables
     hw: HardwareConfig
+    backend: "TimingBackend | str | None" = None
 
     def __post_init__(self):
-        g, t, hw = self.graph, self.tables, self.hw
+        g, hw = self.graph, self.hw
+        self._backend, self._interpret = _resolve_jax_backend(self.backend)
         self._static = dict(
             _shared_statics(g, hw),
-            **{k: jnp.asarray(v) for k, v in _table_arrays(t).items()},
+            **_stacked_device_tables((self.tables,)),
         )
         self._n_chips = hw.n_chiplets
         self._order_cache = ScheduledOrderCache(g.rows, g.n_cols)
+
+    def _run(self, population, full: bool = False):
+        pop = as_stacked(population)
+        orders = self._order_cache.orders(pop.segmentation)
+        return _population_pass(
+            jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
+            n_chips=self._n_chips, backend=self._backend,
+            interpret=self._interpret, full=full, **self._static)
 
     def evaluate_population(
         self, population: "Sequence[MappingEncoding]"
     ) -> tuple[np.ndarray, np.ndarray]:
         """Returns (latency_s, energy_j) arrays over the population.
         Accepts a list of encodings or a ``StackedPopulation``."""
-        pop = as_stacked(population)
-        orders = self._order_cache.orders(pop.segmentation)
-        lat, en_pj = _population_pass(
-            jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
-            n_chips=self._n_chips, **self._static)
+        lat, en_pj = self._run(population)
         scale = self.graph.scale
         return (np.asarray(lat, np.float64) * scale,
                 np.asarray(en_pj, np.float64) * 1e-12 * scale)
+
+    def timing_matrix(self, population) -> TimingMatrix:
+        """Full per-op timing matrix (P, T)/(P, C), block scale applied."""
+        _, _, end, free, tproc = self._run(population, full=True)
+        scale = self.graph.scale
+        end = np.asarray(end, np.float64) * scale
+        return TimingMatrix(
+            op_start_s=end - np.asarray(tproc, np.float64) * scale,
+            op_end_s=end,
+            chip_free_s=np.asarray(free, np.float64) * scale)
 
 
 @dataclass
 class GroupPopulationEvaluator:
     """Evaluates a GA population against ALL structurally-identical batches
     of a ``search_mapping`` group in one jitted call per generation: the
-    per-batch cost tables are stacked on a leading (B,) axis and vmapped
-    over on device, while the mapping-structural pass runs once per
-    individual. Returns (B, P) latency/energy."""
+    per-batch cost tables live on device in a persistent keyed cache and
+    are vmapped over, while the mapping-structural pass runs once per
+    individual. Returns (B, P) latency/energy; ``timing_matrix`` exposes
+    the full per-op (B, P, T) matrix the SLO objectives fold."""
 
     graphs: Sequence[ExecutionGraph]
     tables: Sequence[CostTables]
     hw: HardwareConfig
+    backend: "TimingBackend | str | None" = None
 
     def __post_init__(self):
         g0 = self.graphs[0]
@@ -367,15 +458,11 @@ class GroupPopulationEvaluator:
         assert all([(m.pred_lo, m.pred_hi) for m in g.layers] == preds0
                    for g in self.graphs), \
             "group batches must share predecessor intervals"
-        per_batch = [_table_arrays(t) for t in self.tables]
-        stacked = {
-            k: jnp.asarray(np.stack([arrs[k] for arrs in per_batch]))
-            for k in per_batch[0]
-        }
-        self._static = dict(
-            _shared_statics(g0, self.hw),
-            **stacked,
-        )
+        self._backend, self._interpret = _resolve_jax_backend(self.backend)
+        stacked = _stacked_device_tables(tuple(self.tables))
+        if len(self.tables) == 1:
+            stacked = {k: v[None] for k, v in stacked.items()}
+        self._static = dict(_shared_statics(g0, self.hw), **stacked)
         self._n_chips = self.hw.n_chiplets
         self._order_cache = ScheduledOrderCache(g0.rows, g0.n_cols)
         self._scales = np.array([g.scale for g in self.graphs])
@@ -384,16 +471,32 @@ class GroupPopulationEvaluator:
     def n_batches(self) -> int:
         return len(self.graphs)
 
+    def _run(self, population, full: bool = False):
+        pop = as_stacked(population)
+        orders = self._order_cache.orders(pop.segmentation)
+        return _grouped_population_pass(
+            jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
+            n_chips=self._n_chips, backend=self._backend,
+            interpret=self._interpret, full=full, **self._static)
+
     def evaluate_population(
         self, population
     ) -> tuple[np.ndarray, np.ndarray]:
         """population (list of encodings or StackedPopulation) ->
         ((B, P) latency_s, (B, P) energy_j)."""
-        pop = as_stacked(population)
-        orders = self._order_cache.orders(pop.segmentation)
-        lat, en_pj = _grouped_population_pass(
-            jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
-            n_chips=self._n_chips, **self._static)
+        lat, en_pj = self._run(population)
         scale = self._scales[:, None]
         return (np.asarray(lat, np.float64) * scale,
                 np.asarray(en_pj, np.float64) * 1e-12 * scale)
+
+    def timing_matrix(self, population) -> TimingMatrix:
+        """Full (B, P, T) timing matrix, block scale applied. The GA hot
+        loop (``evaluate_population``) never materialises these outputs —
+        only this entry point compiles the ``full`` variant."""
+        _, _, end, free, tproc = self._run(population, full=True)
+        scale = self._scales[:, None, None]
+        end = np.asarray(end, np.float64) * scale
+        return TimingMatrix(
+            op_start_s=end - np.asarray(tproc, np.float64) * scale,
+            op_end_s=end,
+            chip_free_s=np.asarray(free, np.float64) * scale)

@@ -16,10 +16,13 @@ baselines. Two capability flags drive where an objective may be used:
   scenarios, whose timing is synthetic.
 
 Scores are always minimised; goodput (a maximised rate) is returned
-negated. Within one structure group of the mapping GA, SLO objectives use
-total group latency as their fitness surrogate — TTFT/TPOT/goodput are
-monotone in every iteration's latency, so minimising it is aligned even
-though cross-group timing is unavailable inside a single group's search.
+negated. SLO objectives are scored on *true* per-request timings inside
+the mapping GA as well: ``score_timings`` is vectorised over leading axes,
+so a whole population's rollout pricing — (P, R) TTFT/TPOT folded from the
+evaluator's timing matrix by ``repro.core.timing.fold_request_timings`` —
+scores in one call. (The old within-group total-latency surrogate is gone:
+it could not trade prefill vs decode iterations, the paper's central
+mixed-request-types claim.)
 """
 from __future__ import annotations
 
@@ -115,14 +118,26 @@ class Energy(Objective):
 
 
 class _StreamObjective(Objective):
-    """SLO-aware base: scored from rollout timings; within one structure
-    group the GA minimises total latency (monotone surrogate, see module
-    docstring)."""
+    """SLO-aware base: scored from rollout timings. ``score_timings`` is
+    the vectorised core — the request axis is last, leading axes (a GA
+    population) broadcast through — and ``score`` is its scalar wrapper.
+    There is deliberately no latency/energy ``ga_fitness``: the mapping GA
+    prices every candidate's rollout and ranks on true timings."""
 
     requires_stream = True
 
     def ga_fitness(self, lat, en):
-        return lat.mean(axis=0)
+        raise RuntimeError(
+            f"objective {self.name!r} has no latency/energy GA fitness — "
+            "it is scored on true per-request timings: fold the evaluator's"
+            " timing matrix into RequestTimings (timing.fold_request_"
+            "timings) and call score_timings (search_mapping does this)")
+
+    def score_timings(self, timings: RequestTimings) -> np.ndarray:
+        raise NotImplementedError
+
+    def score(self, latency_s, energy_j, mc=1.0, timings=None):
+        return float(self.score_timings(self._timings(timings)))
 
 
 class TTFTPercentile(_StreamObjective):
@@ -134,14 +149,13 @@ class TTFTPercentile(_StreamObjective):
         self.pct = float(pct)
         self.name = f"ttft_p{pct:g}"
 
-    def score(self, latency_s, energy_j, mc=1.0, timings=None):
-        t = self._timings(timings)
-        ttft = t.cold_ttft_s
-        if ttft.size == 0:
+    def score_timings(self, timings):
+        ttft = timings.cold_ttft_s
+        if ttft.shape[-1] == 0:
             raise ValueError("stream has no cold requests: TTFT undefined")
         # method="higher": no interpolation, so +inf (unserved) stays +inf
         # instead of poisoning the estimate with nan
-        return float(np.percentile(ttft, self.pct, method="higher"))
+        return np.percentile(ttft, self.pct, axis=-1, method="higher")
 
 
 class TPOTPercentile(_StreamObjective):
@@ -152,9 +166,9 @@ class TPOTPercentile(_StreamObjective):
         self.pct = float(pct)
         self.name = f"tpot_p{pct:g}"
 
-    def score(self, latency_s, energy_j, mc=1.0, timings=None):
-        t = self._timings(timings)
-        return float(np.percentile(t.tpot_s, self.pct, method="higher"))
+    def score_timings(self, timings):
+        return np.percentile(timings.tpot_s, self.pct, axis=-1,
+                             method="higher")
 
 
 class GoodputUnderSLO(_StreamObjective):
@@ -166,13 +180,13 @@ class GoodputUnderSLO(_StreamObjective):
         self.tpot_slo_s = float(tpot_slo_s)
         self.name = f"goodput@ttft{ttft_slo_s:g}s/tpot{tpot_slo_s:g}s"
 
-    def score(self, latency_s, energy_j, mc=1.0, timings=None):
-        t = self._timings(timings)
+    def score_timings(self, timings):
+        t = timings
         ttft_ok = t.warm | (t.ttft_s <= self.ttft_slo_s)
         ok = t.finished & ttft_ok & (t.tpot_s <= self.tpot_slo_s)
-        if t.makespan_s <= 0.0:
-            return 0.0
-        return -float(ok.sum() / t.makespan_s)
+        mk = np.asarray(t.makespan_s, dtype=float)
+        good = ok.sum(axis=-1)
+        return -np.where(mk > 0.0, good / np.maximum(mk, 1e-300), 0.0)
 
 
 _NAMED = {

@@ -150,18 +150,23 @@ def mixed_serving_stream(prefill_len: int, decode_ctx: int, decode_bs: int,
 
 @dataclass
 class RequestTimings:
-    """Per-request timing of a priced rollout (seconds)."""
+    """Per-request timing of a priced rollout (seconds).
 
-    ttft_s: np.ndarray        # (R,) inf if no first token within horizon
-    tpot_s: np.ndarray        # (R,) inf if unfinished; 0 for 1-token outputs
-    finished: np.ndarray      # (R,) bool
+    Arrays may carry leading axes (e.g. (P, R) for a whole GA population
+    priced in one fold — see ``timing.fold_request_timings``); the request
+    axis is always last, and ``warm`` stays (R,) (the request mix does not
+    vary across candidates)."""
+
+    ttft_s: np.ndarray        # (..., R) inf if no first token within horizon
+    tpot_s: np.ndarray        # (..., R) inf if unfinished; 0 for 1-token outputs
+    finished: np.ndarray      # (..., R) bool
     warm: np.ndarray          # (R,) bool — TTFT undefined for these
-    makespan_s: float
+    makespan_s: "float | np.ndarray"
     synthetic: bool = False   # fixed-batch shim: no real scheduler timing
 
     @property
     def cold_ttft_s(self) -> np.ndarray:
-        return self.ttft_s[~self.warm]
+        return self.ttft_s[..., ~self.warm]
 
 
 @dataclass
@@ -185,29 +190,35 @@ class StreamRollout:
 
     def timings(self, batch_latency_s) -> RequestTimings:
         """Price the rollout: ``batch_latency_s`` is the evaluator's latency
-        per executed iteration, shape (B,). TTFT runs from the start of the
+        per executed iteration, shape (..., B) — leading axes (e.g. a GA
+        population) broadcast through. TTFT runs from the start of the
         first executed iteration at/after arrival (queueing included) to
         the end of the first-token iteration; TPOT is the mean inter-token
         time over the remaining output."""
         lat = np.asarray(batch_latency_s, dtype=float)
-        assert lat.shape == (len(self.batches),), \
-            f"expected ({len(self.batches)},) latencies, got {lat.shape}"
-        cum = np.concatenate([[0.0], np.cumsum(lat)])
+        nb = len(self.batches)
+        assert lat.shape[-1:] == (nb,), \
+            f"expected (..., {nb}) latencies, got {lat.shape}"
+        cum = np.concatenate(
+            [np.zeros(lat.shape[:-1] + (1,)), np.cumsum(lat, axis=-1)],
+            axis=-1)
         served = self.first_b >= 0
         fin = self.done_b >= 0
-        ttft = np.full(self.n_requests, np.inf)
-        ttft[served] = (cum[self.first_b[served] + 1]
-                        - cum[np.minimum(self.arrival_b[served],
-                                         len(self.batches) - 1)])
-        tpot = np.full(self.n_requests, np.inf)
+        fb = np.where(served, self.first_b, 0)
+        db = np.where(fin, self.done_b, 0)
+        arr = np.minimum(self.arrival_b, nb - 1)
+        ttft = np.where(served, cum[..., fb + 1] - cum[..., arr], np.inf)
         steps = np.maximum(self.n_new_tokens - 1, 1)
-        tpot[fin] = (cum[self.done_b[fin] + 1]
-                     - cum[self.first_b[fin] + 1]) / steps[fin]
-        one_tok = fin & (self.n_new_tokens <= 1)
-        tpot[one_tok] = 0.0
-        return RequestTimings(ttft_s=ttft, tpot_s=tpot, finished=fin,
-                              warm=self.warm, makespan_s=float(cum[-1]),
-                              synthetic=self.synthetic)
+        tpot = np.where(fin, (cum[..., db + 1] - cum[..., fb + 1]) / steps,
+                        np.inf)
+        tpot = np.where(fin & (self.n_new_tokens <= 1), 0.0, tpot)
+        makespan = cum[..., -1]
+        return RequestTimings(
+            ttft_s=ttft, tpot_s=tpot,
+            finished=np.broadcast_to(fin, ttft.shape).copy(),
+            warm=self.warm,
+            makespan_s=float(makespan) if lat.ndim == 1 else makespan,
+            synthetic=self.synthetic)
 
 
 def _fixed_rollout(stream: RequestStream) -> StreamRollout:

@@ -3,14 +3,30 @@
 The GA evaluates 100+ mappings per generation; each evaluation is a
 sequential timing recurrence over the scheduled op order:
 
-    start_t = max(chip_free[chip_t], max_{p in preds(col_t)} end[row_t, p])
-    end[row_t, col_t] = chip_free[chip_t] = start_t + t_proc[t]
+    start_t = max(chip_free[chip_t], max_w end[ppos[t, w]])
+    end[t] = chip_free[chip_t] = start_t + t_proc[t]
+
+where ``ppos`` is the *padded predecessor-position* layout shared with the
+dense XLA path (``repro.core.jax_evaluator._structural_pass``): for every
+scheduled step t, the positions of its (<= W) predecessor ops in the same
+scheduled order, padded with the sentinel T, which indexes the
+permanently-zero slot of the end vector (matching the oracle's
+``max(..., 0)``).
 
 The recurrence is tiny but strictly sequential in t — on TPU the win is
-evaluating many *independent* population members per core with all state
-(per-op end times, per-chiplet free times, predecessor masks) resident in
-VMEM. Grid = (population,); each grid step runs the full T-step recurrence
-from VMEM scratch via ``fori_loop`` with dynamic loads/stores.
+evaluating many *independent* (batch x population) members per core with
+all state (the (T+1,) end vector and the (C,) chip-free vector) resident in
+VMEM. Grid = (population, batches) with the batch axis innermost; each
+grid step runs the full T-step recurrence from VMEM scratch via
+``fori_loop`` with dynamic loads/stores. The mapping-dependent index
+tensors (chip sequence, ppos) depend on the individual only, so their
+blocks keep the same index across the inner batch sweep and are fetched
+once per population member.
+
+Unlike the original makespan-only kernel, the outputs are the full timing
+matrix — per-op end times in scheduled order plus per-chiplet free times —
+which ``repro.core.timing`` folds into per-request TTFT/TPOT for the
+SLO-aware GA objectives.
 
 Validated against ``ref.mapping_eval_reference`` (and transitively against
 the numpy evaluation engine, whose timing pass has identical semantics).
@@ -25,65 +41,71 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _mapping_eval_kernel(row_ref, col_ref, chip_ref, tproc_ref, pmask_ref,
-                         lat_ref, end_ref, free_ref, *,
-                         t_len: int, m_cols: int, n_chips: int):
-    end_ref[...] = jnp.zeros_like(end_ref)
-    free_ref[...] = jnp.zeros_like(free_ref)
+def _mapping_eval_kernel(chip_ref, ppos_ref, tproc_ref, end_ref, free_ref,
+                         end_scr, free_scr, *,
+                         t_len: int, width: int, n_chips: int):
+    end_scr[...] = jnp.zeros_like(end_scr)     # (1, T+1); slot T stays 0
+    free_scr[...] = jnp.zeros_like(free_scr)   # (C, 1)
 
     def step(t, _):
-        b = row_ref[t]
-        l = col_ref[t]
         c = chip_ref[0, t]
-        pmask = pl.load(pmask_ref, (pl.dslice(l, 1), slice(None)))   # [1, M]
-        end_row = pl.load(end_ref, (pl.dslice(b, 1), slice(None)))   # [1, M]
-        pred_end = jnp.max(end_row * pmask)
-        chip_free = pl.load(free_ref, (pl.dslice(c, 1), slice(None)))
+        pred_end = jnp.float32(0.0)
+        for w in range(width):                 # static unroll; W is small
+            idx = ppos_ref[0, t * width + w]
+            e = pl.load(end_scr, (pl.dslice(0, 1), pl.dslice(idx, 1)))
+            pred_end = jnp.maximum(pred_end, e[0, 0])
+        chip_free = pl.load(free_scr, (pl.dslice(c, 1), slice(None)))
         start = jnp.maximum(chip_free[0, 0], pred_end)
-        fin = start + tproc_ref[0, t]
-        pl.store(end_ref, (pl.dslice(b, 1), pl.dslice(l, 1)),
+        fin = start + tproc_ref[0, 0, t]
+        pl.store(end_scr, (pl.dslice(0, 1), pl.dslice(t, 1)),
                  fin.reshape(1, 1))
-        pl.store(free_ref, (pl.dslice(c, 1), slice(None)), fin.reshape(1, 1))
+        pl.store(free_scr, (pl.dslice(c, 1), slice(None)), fin.reshape(1, 1))
         return 0
 
     jax.lax.fori_loop(0, t_len, step, 0)
-    lat_ref[0, 0] = jnp.max(end_ref[...])
+    end_ref[...] = end_scr[0, :t_len].reshape(1, 1, t_len)
+    free_ref[...] = free_scr[:, 0].reshape(1, 1, n_chips)
 
 
-@functools.partial(jax.jit, static_argnames=("rows", "n_chips", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_chips", "interpret"))
 def mapping_eval(
-    t_proc: jax.Array,    # [P, T] float32 per-op processing times
-    chip: jax.Array,      # [P, T] int32 chiplet per scheduled op
-    row: jax.Array,       # [T] int32
-    col: jax.Array,       # [T] int32
-    pred_mask: jax.Array,  # [M, M] float32 (1.0 where predecessor)
-    rows: int,
+    t_proc: jax.Array,   # [B, P, T] float32 per-op processing times
+    chip: jax.Array,     # [P, T] int32 chiplet per scheduled op
+    ppos: jax.Array,     # [P, T, W] int32 padded predecessor positions
     n_chips: int,
     interpret: bool = False,
-) -> jax.Array:
-    """Returns the makespan (total latency) per population member: [P]."""
-    pop, t_len = t_proc.shape
-    m_cols = pred_mask.shape[0]
+) -> tuple[jax.Array, jax.Array]:
+    """Full timing matrix per (batch, population) member:
+    (end [B, P, T] scheduled-order op end times, free [B, P, C] per-chiplet
+    free times). The makespan is ``end.max(-1)``."""
+    n_batch, pop, t_len = t_proc.shape
+    width = ppos.shape[-1]
     kernel = functools.partial(_mapping_eval_kernel, t_len=t_len,
-                               m_cols=m_cols, n_chips=n_chips)
-    out = pl.pallas_call(
+                               width=width, n_chips=n_chips)
+    end, free = pl.pallas_call(
         kernel,
-        grid=(pop,),
+        grid=(pop, n_batch),
         in_specs=[
-            pl.BlockSpec((t_len,), lambda p: (0,), memory_space=pltpu.SMEM),
-            pl.BlockSpec((t_len,), lambda p: (0,), memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, t_len), lambda p: (p, 0),
+            pl.BlockSpec((1, t_len), lambda p, b: (p, 0),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, t_len), lambda p: (p, 0)),
-            pl.BlockSpec((m_cols, m_cols), lambda p: (0, 0)),
+            pl.BlockSpec((1, t_len * width), lambda p, b: (p, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, t_len), lambda p, b: (b, p, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1), lambda p: (p, 0)),
-        out_shape=jax.ShapeDtypeStruct((pop, 1), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((1, 1, t_len), lambda p, b: (b, p, 0)),
+            pl.BlockSpec((1, 1, n_chips), lambda p, b: (b, p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_batch, pop, t_len), jnp.float32),
+            jax.ShapeDtypeStruct((n_batch, pop, n_chips), jnp.float32),
+        ],
         scratch_shapes=[
-            pltpu.VMEM((rows, m_cols), jnp.float32),
+            pltpu.VMEM((1, t_len + 1), jnp.float32),
             pltpu.VMEM((n_chips, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(row.astype(jnp.int32), col.astype(jnp.int32), chip.astype(jnp.int32),
-      t_proc.astype(jnp.float32), pred_mask.astype(jnp.float32))
-    return out[:, 0]
+    )(chip.astype(jnp.int32),
+      ppos.astype(jnp.int32).reshape(pop, t_len * width),
+      t_proc.astype(jnp.float32))
+    return end, free

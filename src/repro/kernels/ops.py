@@ -38,8 +38,7 @@ def ssd_scan(x, dt, a, b_mat, c_mat, chunk=128, interpret=None):
         interpret=use_interpret() if interpret is None else interpret)
 
 
-def mapping_eval(t_proc, chip, row, col, pred_mask, rows, n_chips,
-                 interpret=None):
+def mapping_eval(t_proc, chip, ppos, n_chips, interpret=None):
     return _mapping_eval(
-        t_proc, chip, row, col, pred_mask, rows, n_chips,
+        t_proc, chip, ppos, n_chips,
         interpret=use_interpret() if interpret is None else interpret)

@@ -91,29 +91,30 @@ def ssd_reference(
 
 
 def mapping_eval_reference(
-    t_proc: np.ndarray,    # [P, T] per-op processing time in scheduled order
-    chip: np.ndarray,      # [P, T] chiplet of each scheduled op
-    row: np.ndarray,       # [T]    graph row of each scheduled op
-    col: np.ndarray,       # [T]    graph col of each scheduled op
-    pred_mask: np.ndarray,  # [M, M] bool
-    rows: int,
+    t_proc: np.ndarray,  # [B, P, T] per-op processing time in scheduled order
+    chip: np.ndarray,    # [P, T]    chiplet of each scheduled op
+    ppos: np.ndarray,    # [P, T, W] padded predecessor positions (sentinel T)
     n_chips: int,
-) -> np.ndarray:
-    """Sequential timing recurrence (evaluation-engine inner loop):
-    start = max(chip_free, max over predecessor end times). Returns the
-    makespan per population member."""
-    pop, t_len = t_proc.shape
-    m_cols = pred_mask.shape[0]
-    out = np.zeros(pop)
-    for pi in range(pop):
-        chip_free = np.zeros(n_chips)
-        end = np.zeros((rows, m_cols))
-        for t in range(t_len):
-            b, l, c = row[t], col[t], chip[pi, t]
-            pred_end = (end[b] * pred_mask[l]).max() if pred_mask[l].any() else 0.0
-            start = max(chip_free[c], pred_end)
-            fin = start + t_proc[pi, t]
-            end[b, l] = fin
-            chip_free[c] = fin
-        out[pi] = end.max()
-    return out
+) -> tuple[np.ndarray, np.ndarray]:
+    """Sequential timing recurrence (evaluation-engine pass B):
+    start = max(chip_free, max over predecessor end times), predecessors
+    given as padded positions into the scheduled order (the sentinel T
+    indexes a permanently-zero slot). Returns the full timing matrix —
+    (end [B, P, T], chip free [B, P, C]) — per (batch, population) member."""
+    n_batch, pop, t_len = t_proc.shape
+    end = np.zeros((n_batch, pop, t_len))
+    free = np.zeros((n_batch, pop, n_chips))
+    for bi in range(n_batch):
+        for pi in range(pop):
+            endv = np.zeros(t_len + 1)
+            chip_free = np.zeros(n_chips)
+            for t in range(t_len):
+                c = chip[pi, t]
+                pred_end = endv[ppos[pi, t]].max()
+                start = max(chip_free[c], pred_end)
+                fin = start + t_proc[bi, pi, t]
+                endv[t] = fin
+                chip_free[c] = fin
+            end[bi, pi] = endv[:t_len]
+            free[bi, pi] = chip_free
+    return end, free

@@ -24,6 +24,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 
 @dataclass
 class ServeRequest:
@@ -224,3 +226,60 @@ def plan_rollout(requests: list[ServeRequest], scheduler: Scheduler,
             r.generated.append(0)
         retire_finished(running, finished, free, it)
         it += 1
+
+
+def priced_rollout(requests: list[ServeRequest], scheduler: Scheduler,
+                   max_slots: int, batch_latency_s,
+                   max_iters: int = 100_000) -> dict:
+    """Reference per-request pricing, derived straight from the scheduler's
+    state transitions: drive ``plan_rollout`` and charge the i-th executed
+    iteration ``batch_latency_s[i]`` seconds, reading first-token /
+    completion events off the iteration plans themselves.
+
+    This is deliberately *independent* of the rollout-index bookkeeping in
+    ``repro.core.streams`` (and of the evaluator's timing-matrix fold) —
+    the property suite asserts all three agree. Requests must carry
+    ``rid`` in ``[0, len(requests))``. Returns arrays: ``ttft_s`` (inf if
+    no first token), ``tpot_s`` (inf if unfinished, 0 for 1-token
+    outputs), ``finished``, ``n_new_tokens`` and ``makespan_s``.
+    """
+    lat = np.asarray(batch_latency_s, dtype=float)
+    n = len(requests)
+    t_arr = np.full(n, np.nan)
+    t_first = np.full(n, np.inf)
+    t_done = np.full(n, np.inf)
+    ntok = np.zeros(n, dtype=int)
+    clock = 0.0
+    bi = 0
+    for it, plan in plan_rollout(requests, scheduler, max_slots, max_iters):
+        assert bi < lat.shape[0], \
+            f"rollout executed more than the {lat.shape[0]} priced iterations"
+        t_start, t_end = clock, clock + lat[bi]
+        for r in requests:
+            if r.arrived_iter <= it and np.isnan(t_arr[r.rid]):
+                t_arr[r.rid] = t_start   # first executed iter >= arrival
+        for req, chunk_len in plan.prefill:
+            if req.prefilled + chunk_len >= len(req.prompt):
+                ntok[req.rid] += 1       # prefill completion emits a token
+                if not np.isfinite(t_first[req.rid]):
+                    t_first[req.rid] = t_end
+                if ntok[req.rid] >= req.max_new_tokens:
+                    t_done[req.rid] = t_end
+        for r in plan.decode:
+            ntok[r.rid] += 1
+            if not np.isfinite(t_first[r.rid]):
+                t_first[r.rid] = t_end
+            if ntok[r.rid] >= r.max_new_tokens:
+                t_done[r.rid] = t_end
+        clock = t_end
+        bi += 1
+    assert bi == lat.shape[0], \
+        f"rollout executed {bi} iterations, {lat.shape[0]} latencies given"
+    served = np.isfinite(t_first)
+    fin = np.isfinite(t_done)
+    ttft = np.where(served, t_first - t_arr, np.inf)
+    steps = np.maximum(ntok - 1, 1)
+    tpot = np.where(fin, (t_done - t_first) / steps, np.inf)
+    tpot = np.where(fin & (ntok <= 1), 0.0, tpot)
+    return dict(ttft_s=ttft, tpot_s=tpot, finished=fin,
+                n_new_tokens=ntok, makespan_s=float(clock))

@@ -70,21 +70,31 @@ def test_ssd_scan(b, l, h, p, n, chunk):
 
 
 @settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 100), pop=st.integers(1, 4),
+@given(seed=st.integers(0, 100), nb=st.integers(1, 3), pop=st.integers(1, 4),
        rows=st.integers(1, 3), cols=st.integers(2, 5), chips=st.integers(1, 4))
-def test_mapping_eval_kernel(seed, pop, rows, cols, chips):
+def test_mapping_eval_kernel(seed, nb, pop, rows, cols, chips):
+    """Pallas kernel == sequential reference on randomized scheduled orders
+    (chain dependencies within each row, random chip assignments)."""
     rng = np.random.default_rng(seed)
     t_len = rows * cols
-    t_proc = rng.uniform(0.1, 1.0, size=(pop, t_len)).astype(np.float32)
+    t_proc = rng.uniform(0.1, 1.0, size=(nb, pop, t_len)).astype(np.float32)
     chip = rng.integers(0, chips, size=(pop, t_len)).astype(np.int32)
-    rowv = np.repeat(np.arange(rows), cols).astype(np.int32)
-    colv = np.tile(np.arange(cols), rows).astype(np.int32)
-    pm = np.zeros((cols, cols), bool)
-    for l in range(1, cols):
-        pm[l, l - 1] = True
-    lat = ops.mapping_eval(jnp.asarray(t_proc), jnp.asarray(chip),
-                           jnp.asarray(rowv), jnp.asarray(colv),
-                           jnp.asarray(pm, jnp.float32), rows, chips)
-    expect = ref.mapping_eval_reference(t_proc, chip, rowv, colv, pm,
-                                        rows, chips)
-    np.testing.assert_allclose(np.asarray(lat), expect, rtol=1e-5)
+    # per-individual random row interleaving of a per-row column chain
+    ppos = np.zeros((pop, t_len, 1), dtype=np.int32)
+    for p in range(pop):
+        order = np.stack([np.repeat(np.arange(rows), cols),
+                          np.tile(np.arange(cols), rows)], axis=1)
+        order = order[rng.permutation(t_len)]
+        # keep each row's columns in increasing order (valid schedule)
+        for r in range(rows):
+            sel = order[:, 0] == r
+            order[sel, 1] = np.sort(order[sel, 1])
+        pos = np.zeros((rows, cols), dtype=np.int32)
+        pos[order[:, 0], order[:, 1]] = np.arange(t_len)
+        for t, (r, c) in enumerate(order):
+            ppos[p, t, 0] = pos[r, c - 1] if c > 0 else t_len
+    end, free = ops.mapping_eval(jnp.asarray(t_proc), jnp.asarray(chip),
+                                 jnp.asarray(ppos), chips)
+    e_end, e_free = ref.mapping_eval_reference(t_proc, chip, ppos, chips)
+    np.testing.assert_allclose(np.asarray(end), e_end, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(free), e_free, rtol=1e-5)

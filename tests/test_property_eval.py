@@ -9,11 +9,26 @@ from repro.core.encoding import random_encoding
 from repro.core.evaluator import CostTables, evaluate
 from repro.core.hardware import make_hardware
 from repro.core.jax_evaluator import PopulationEvaluator
+from repro.core.streams import RequestStream, StreamRequest, rollout
+from repro.core.timing import (
+    DenseTimingBackend,
+    OracleTimingBackend,
+    PallasTimingBackend,
+    fold_request_timings,
+    get_graph_and_tables,
+)
 from repro.core.workload import (
     LLMSpec,
     build_execution_graph,
     decode_request,
     prefill_request,
+)
+from repro.serving.scheduler import (
+    ChunkedPrefillScheduler,
+    OrcaScheduler,
+    ServeRequest,
+    VLLMScheduler,
+    priced_rollout,
 )
 
 
@@ -96,6 +111,82 @@ def test_jax_evaluator_matches_oracle_randomised(seed):
     r = evaluate(g, enc, hw, t)
     assert lat[0] == pytest.approx(r.latency_s, rel=1e-4)
     assert en[0] == pytest.approx(r.energy_j, rel=1e-4)
+
+
+def _random_stream_case(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 6))
+    reqs = []
+    for _ in range(n):
+        if rng.random() < 0.4:
+            reqs.append(StreamRequest(int(rng.integers(20, 100)),
+                                      int(rng.integers(1, 4)),
+                                      warm_context=int(rng.integers(30, 120))))
+        else:
+            reqs.append(StreamRequest(int(rng.integers(16, 128)),
+                                      int(rng.integers(1, 5)),
+                                      arrival_iter=int(rng.integers(0, 4))))
+    sched = [VLLMScheduler(), OrcaScheduler(),
+             ChunkedPrefillScheduler(chunk=64)][seed % 3]
+    return RequestStream.from_requests(reqs), sched
+
+
+def _serve_requests(sreqs):
+    """Rebuild the ServeRequest list exactly as streams.rollout does."""
+    out = []
+    for i, s in enumerate(sreqs):
+        if s.warm:
+            out.append(ServeRequest(i, [0] * s.warm_context,
+                                    s.max_new_tokens,
+                                    prefilled=s.warm_context,
+                                    arrived_iter=s.arrival_iter))
+        else:
+            out.append(ServeRequest(i, [0] * max(s.prompt_len, 1),
+                                    s.max_new_tokens,
+                                    arrived_iter=s.arrival_iter))
+    return out
+
+
+@settings(max_examples=9, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fold_from_timing_matrix_matches_scheduler_rollout(seed):
+    """For ANY timing backend: per-request TTFT/TPOT folded from the
+    evaluator's timing matrix equal an independent re-pricing of the same
+    scheduler plan_rollout (state-transition bookkeeping, no index
+    arrays)."""
+    stream, sched = _random_stream_case(seed)
+    ro = rollout(stream, sched)
+    backend = [OracleTimingBackend(), DenseTimingBackend(),
+               PallasTimingBackend(interpret=True)][seed % 3]
+    spec = LLMSpec("p", 256, 4, 4, 64, 1024, 1000, 4)
+    hw = make_hardware(64, "M", tensor_parallel=2)
+    hw = hw.replace(layout=tuple(["WS", "OS"] * (hw.n_chiplets // 2)))
+    rng = np.random.default_rng(seed)
+    encs = {}
+    lat = np.zeros(len(ro.batches))
+    for i, b in enumerate(ro.batches):
+        g, t = get_graph_and_tables(spec, b, hw, 2, 1)
+        key = (g.rows, g.n_cols)
+        if key not in encs:
+            encs[key] = random_encoding(rng, g.rows, g.n_cols,
+                                        hw.n_chiplets)
+        # latency == makespan of the backend's timing matrix
+        lat[i] = evaluate(g, encs[key], hw, t, backend=backend).latency_s
+
+    # the two folds agree with each other...
+    t_np = ro.timings(lat)
+    t_dev = fold_request_timings(ro, lat)
+    np.testing.assert_allclose(t_dev.ttft_s, t_np.ttft_s, rtol=1e-5)
+    np.testing.assert_allclose(t_dev.tpot_s, t_np.tpot_s, rtol=1e-5)
+
+    # ...and with the scheduler's own state-transition pricing
+    ref = priced_rollout(_serve_requests(stream.sample()), sched,
+                         len(stream.requests), lat, max_iters=256)
+    np.testing.assert_allclose(t_np.ttft_s, ref["ttft_s"], rtol=1e-9)
+    np.testing.assert_allclose(t_np.tpot_s, ref["tpot_s"], rtol=1e-9)
+    np.testing.assert_array_equal(t_np.finished, ref["finished"])
+    np.testing.assert_array_equal(ro.n_new_tokens, ref["n_new_tokens"])
+    assert t_np.makespan_s == pytest.approx(ref["makespan_s"])
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,360 @@
+"""Pluggable timing backends: shared parity suite (oracle == dense ==
+pallas-interpret on full timing matrices), backend selection/fallback,
+the persistent cost-table cache, and the SLO-aware GA ranking on true
+per-request timings (surrogate vs true ordering)."""
+import numpy as np
+import pytest
+
+from repro.core import timing
+from repro.core.compass import Scenario, hardware_objective, search_mapping
+from repro.core.encoding import random_encoding
+from repro.core.evaluator import (
+    CostTables,
+    cost_tables_build_count,
+    evaluate,
+)
+from repro.core.ga import GAConfig
+from repro.core.hardware import make_hardware
+from repro.core.jax_evaluator import (
+    GroupPopulationEvaluator,
+    device_table_cache_stats,
+    jit_cache_sizes,
+)
+from repro.core.objectives import GoodputUnderSLO, get_objective
+from repro.core.streams import RequestStream, StreamRequest, rollout
+from repro.core.timing import (
+    DenseTimingBackend,
+    OracleTimingBackend,
+    PallasTimingBackend,
+    fold_request_timings,
+    get_timing_backend,
+    resolve_timing_backend,
+)
+from repro.core.workload import (
+    LLMSpec,
+    MoESpec,
+    build_execution_graph,
+    decode_request,
+    prefill_request,
+)
+from repro.serving.scheduler import get_scheduler
+
+BACKENDS = [OracleTimingBackend(), DenseTimingBackend(),
+            PallasTimingBackend(interpret=True)]
+
+
+def _paper_cases():
+    """Small instances of the paper's scenario shapes (dense / MoE /
+    hybrid-free mamba), mixed prefill+decode batches."""
+    return [
+        (LLMSpec("dense", 256, 4, 4, 64, 1024, 1000, 8),
+         [prefill_request(128), prefill_request(64), decode_request(300)], 2),
+        (LLMSpec("moe", 256, 4, 2, 64, 1024, 1000, 8,
+                 moe=MoESpec(8, 1, 2, 128)),
+         [decode_request(100 + 37 * i) for i in range(4)], 2),
+        (LLMSpec("mamba", 256, 0, 0, 64, 0, 1000, 8, attn_kind="none",
+                 mixer="mamba", d_inner=512, ssm_state=16),
+         [prefill_request(200), decode_request(500)], 1),
+    ]
+
+
+def _hw():
+    hw = make_hardware(64, "M", layout=None, tensor_parallel=2)
+    return hw.replace(layout=tuple(["WS", "OS"] * (hw.n_chiplets // 2)))
+
+
+# ---------------------------------------------------------------------------
+# Shared parity suite: same timing matrix from all three backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", range(3))
+def test_backends_agree_on_timing_matrix(case):
+    spec, batch, mb = _paper_cases()[case]
+    hw = _hw()
+    g = build_execution_graph(spec, batch, mb, tp=2, n_blocks=2)
+    t = CostTables.build(g, hw)
+    rng = np.random.default_rng(case)
+    pop = [random_encoding(rng, g.rows, g.n_cols, hw.n_chiplets)
+           for _ in range(3)]
+
+    # raw pass-B contract on shared randomized inputs
+    t_len = g.rows * g.n_cols
+    t_proc = rng.uniform(0.1, 1.0, size=(2, 3, t_len))
+    pred_cols, pred_valid = timing.padded_predecessor_columns(
+        [m.pred_lo for m in g.layers], [m.pred_hi for m in g.layers])
+    chip = np.stack([e.layer_to_chip[e.scheduled_order()[:, 0],
+                                     e.scheduled_order()[:, 1]]
+                     for e in pop])
+    ppos = np.stack([timing.padded_predecessor_positions(
+        e.scheduled_order(), pred_cols, pred_valid) for e in pop])
+    mats = [be.timing_matrix(t_proc, chip, ppos, hw.n_chiplets)
+            for be in BACKENDS]
+    for m in mats[1:]:
+        np.testing.assert_allclose(m.op_end_s, mats[0].op_end_s, rtol=1e-5)
+        np.testing.assert_allclose(m.op_start_s, mats[0].op_start_s,
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(m.chip_free_s, mats[0].chip_free_s,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(m.makespan_s, mats[0].makespan_s,
+                                   rtol=1e-5)
+
+    # end-to-end: evaluate() under each backend
+    for enc in pop:
+        rs = [evaluate(g, enc, hw, t, backend=be) for be in BACKENDS]
+        for r in rs[1:]:
+            assert r.latency_s == pytest.approx(rs[0].latency_s, rel=1e-5)
+            np.testing.assert_allclose(r.op_end_s, rs[0].op_end_s, rtol=1e-5)
+
+
+def test_group_evaluator_dense_vs_pallas_interpret():
+    spec, batch, mb = _paper_cases()[0]
+    hw = _hw()
+    g = build_execution_graph(spec, batch, mb, tp=2, n_blocks=2)
+    t = CostTables.build(g, hw)
+    g2 = build_execution_graph(
+        spec, [prefill_request(30), prefill_request(31), decode_request(77)],
+        mb, tp=2, n_blocks=2)
+    t2 = CostTables.build(g2, hw)
+    rng = np.random.default_rng(0)
+    pop = [random_encoding(rng, g.rows, g.n_cols, hw.n_chiplets)
+           for _ in range(4)]
+    ge_d = GroupPopulationEvaluator([g, g2], [t, t2], hw, backend="dense")
+    ge_p = GroupPopulationEvaluator([g, g2], [t, t2], hw,
+                                    backend=PallasTimingBackend(
+                                        interpret=True))
+    lat_d, en_d = ge_d.evaluate_population(pop)
+    lat_p, en_p = ge_p.evaluate_population(pop)
+    np.testing.assert_allclose(lat_p, lat_d, rtol=1e-5)
+    np.testing.assert_allclose(en_p, en_d, rtol=1e-5)
+    tm_d = ge_d.timing_matrix(pop)
+    tm_p = ge_p.timing_matrix(pop)
+    np.testing.assert_allclose(tm_p.op_end_s, tm_d.op_end_s, rtol=1e-5)
+    np.testing.assert_allclose(tm_p.chip_free_s, tm_d.chip_free_s, rtol=1e-5)
+    np.testing.assert_allclose(tm_d.makespan_s, lat_d, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Backend selection / fallback
+# ---------------------------------------------------------------------------
+
+
+def test_backend_resolution_and_env_default(monkeypatch):
+    assert isinstance(get_timing_backend("oracle"), OracleTimingBackend)
+    assert isinstance(get_timing_backend("dense"), DenseTimingBackend)
+    assert isinstance(get_timing_backend("pallas"), PallasTimingBackend)
+    be = DenseTimingBackend()
+    assert get_timing_backend(be) is be
+    with pytest.raises(ValueError, match="unknown timing backend"):
+        get_timing_backend("nope")
+    monkeypatch.delenv(timing.BACKEND_ENV, raising=False)
+    assert isinstance(get_timing_backend(None), DenseTimingBackend)
+    monkeypatch.setenv(timing.BACKEND_ENV, "oracle")
+    assert isinstance(get_timing_backend(None), OracleTimingBackend)
+    sc = Scenario("s", _paper_cases()[0][0], 64,
+                  stream=RequestStream.fixed_batches([[prefill_request(8)]]))
+    assert isinstance(sc.resolved_backend(), OracleTimingBackend)
+
+
+def test_pallas_falls_back_to_dense_off_tpu():
+    import jax
+
+    if jax.default_backend() == "tpu":
+        pytest.skip("fallback rule only applies off-TPU")
+    with pytest.warns(RuntimeWarning, match="falling back to 'dense'"):
+        be = resolve_timing_backend("pallas")
+    assert isinstance(be, DenseTimingBackend)
+    # explicit interpret opts out of the fallback
+    be = resolve_timing_backend(PallasTimingBackend(interpret=True))
+    assert isinstance(be, PallasTimingBackend)
+
+
+def test_oracle_backend_routes_to_numpy_path():
+    from repro.core.compass import _make_population_eval
+
+    spec, batch, mb = _paper_cases()[0]
+    hw = _hw()
+    g = build_execution_graph(spec, batch, mb, tp=2, n_blocks=1)
+    t = CostTables.build(g, hw)
+    fn = _make_population_eval([g], [t], hw, use_jax=None,
+                               timing_backend="oracle")
+    rng = np.random.default_rng(0)
+    enc = random_encoding(rng, g.rows, g.n_cols, hw.n_chiplets)
+    lat, en = fn([enc])
+    r = evaluate(g, enc, hw, t)
+    assert lat[0, 0] == pytest.approx(r.latency_s)
+    assert en[0, 0] == pytest.approx(r.energy_j)
+    # the population evaluators refuse the oracle (no jitted path)
+    with pytest.raises(ValueError, match="oracle"):
+        GroupPopulationEvaluator([g], [t], hw, backend="oracle")
+
+
+# ---------------------------------------------------------------------------
+# Persistent cost-table cache
+# ---------------------------------------------------------------------------
+
+
+def test_second_search_mapping_skips_cost_table_build():
+    spec = LLMSpec("cache-t", 256, 4, 4, 64, 1024, 1000, 4)
+    hw = _hw()
+    batches = [[prefill_request(64), prefill_request(32)],
+               [decode_request(100), decode_request(200)]]
+    cfg = GAConfig(population=8, generations=2)
+    timing.clear_cost_caches()
+    out1 = search_mapping(spec, batches, hw, [2, 2], cfg, objective="edp",
+                          n_blocks=1)
+    builds = cost_tables_build_count()
+    jits = jit_cache_sizes()
+    dev = device_table_cache_stats()
+    out2 = search_mapping(spec, batches, hw, [2, 2], cfg, objective="edp",
+                          n_blocks=1)
+    assert cost_tables_build_count() == builds       # zero new builds
+    assert jit_cache_sizes() == jits                 # zero new compiles
+    # the device-resident stacked buffers were reused, not re-uploaded
+    assert device_table_cache_stats()["misses"] == dev["misses"]
+    assert device_table_cache_stats()["hits"] > dev["hits"]
+    assert out2.latency_s == pytest.approx(out1.latency_s)
+    stats = timing.cost_cache_stats()
+    assert stats["table_hits"] > 0 and stats["graph_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# On-device request-timing fold
+# ---------------------------------------------------------------------------
+
+
+def test_fold_matches_numpy_timings_population():
+    stream = RequestStream.from_requests([
+        StreamRequest(40, 4), StreamRequest(30, 3, arrival_iter=2),
+        StreamRequest(25, 5, warm_context=60),
+    ])
+    ro = rollout(stream, get_scheduler("orca"))
+    nb = len(ro.batches)
+    rng = np.random.default_rng(0)
+    lat = rng.uniform(0.01, 1.0, size=(5, nb))
+    folded = fold_request_timings(ro, lat)
+    assert folded.ttft_s.shape == (5, ro.n_requests)
+    for p in range(5):
+        ref = ro.timings(lat[p])
+        np.testing.assert_allclose(folded.ttft_s[p], ref.ttft_s, rtol=1e-5)
+        np.testing.assert_allclose(folded.tpot_s[p], ref.tpot_s, rtol=1e-5)
+        np.testing.assert_array_equal(folded.finished[p], ref.finished)
+        assert folded.makespan_s[p] == pytest.approx(ref.makespan_s,
+                                                     rel=1e-5)
+    # objectives score vectorised timings identically to per-row scalars
+    obj = get_objective("ttft_p99")
+    vec = obj.score_timings(folded)
+    for p in range(5):
+        assert vec[p] == pytest.approx(
+            obj.score(0, 0, timings=ro.timings(lat[p])), rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# True per-request GA fitness (the deleted latency surrogate)
+# ---------------------------------------------------------------------------
+
+
+SPEC_GA = LLMSpec("ga-t", 256, 4, 4, 64, 1024, 1000, 4)
+
+
+def _ga_scenario():
+    """1 cold + 2 warm requests with staggered lifetimes: the rollout mixes
+    batch structures, so total latency and per-request SLO metrics weight
+    iterations differently."""
+    stream = RequestStream.from_requests([
+        StreamRequest(96, 3),
+        StreamRequest(40, 5, warm_context=50),
+        StreamRequest(80, 2, warm_context=90),
+    ])
+    hw = make_hardware(16, "M", tensor_parallel=2)   # 2 chiplets
+    hw = hw.replace(layout=("WS", "OS"))
+    ro = rollout(stream, get_scheduler("orca"))
+    return stream, hw, ro
+
+
+def _price_assignment(ro, spec, hw, encs_by_group):
+    """Full-rollout per-batch latencies for a per-group mapping assignment
+    (what search_mapping returns in ``encodings``)."""
+    lat = np.zeros(len(ro.batches))
+    for i, b in enumerate(ro.batches):
+        g, t = timing.get_graph_and_tables(spec, b, hw, 2, 1)
+        lat[i] = evaluate(g, encs_by_group[(g.rows, g.n_cols)], hw,
+                          t).latency_s
+    return lat
+
+
+def test_ga_ranks_by_true_timings_where_surrogate_disagrees():
+    """Acceptance: surrogate (total latency) ordering and true
+    (goodput-under-SLO) ordering disagree on a candidate pair, and
+    search_mapping picks a mapping at least as good as the TRUE-optimal of
+    the pair — not the surrogate-optimal."""
+    stream, hw, ro = _ga_scenario()
+    rng = np.random.default_rng(7)
+
+    # structure groups of the rollout
+    keys = []
+    for b in ro.batches:
+        g, _ = timing.get_graph_and_tables(SPEC_GA, b, hw, 2, 1)
+        keys.append((g.rows, g.n_cols))
+    group_keys = sorted(set(keys))
+
+    # sample full per-group assignments and price the whole rollout
+    cands = []
+    for _ in range(24):
+        encs = {k: random_encoding(rng, k[0], k[1], hw.n_chiplets)
+                for k in group_keys}
+        lat = _price_assignment(ro, SPEC_GA, hw, encs)
+        t = ro.timings(lat)
+        cands.append(dict(total=lat.sum(), max_tpot=t.tpot_s.max(),
+                          timings=t, lat=lat))
+
+    # find a pair where the surrogate prefers A but B has headroom to win
+    # under an SLO placed between their worst TPOTs
+    pair = None
+    for i, a in enumerate(cands):
+        for j, b in enumerate(cands):
+            if a["total"] < b["total"] and b["max_tpot"] < a["max_tpot"]:
+                slo = 0.5 * (a["max_tpot"] + b["max_tpot"])
+                obj = GoodputUnderSLO(ttft_slo_s=1e9, tpot_slo_s=slo)
+                sa = obj.score(0, 0, timings=a["timings"])
+                sb = obj.score(0, 0, timings=b["timings"])
+                if sb < sa:          # true ordering disagrees with surrogate
+                    pair = (a, b, obj, sa, sb)
+                    break
+        if pair:
+            break
+    assert pair is not None, "no disagreeing candidate pair found"
+    a, b, obj, score_a, score_b = pair
+
+    out = search_mapping(
+        SPEC_GA, ro.batches, hw, [2] * len(ro.batches),
+        GAConfig(population=24, generations=10, seed=0),
+        objective=obj, n_blocks=1, stream_rollout=ro)
+    # the GA ranked by true timings: it matches/beats the true-optimal of
+    # the pair, which the surrogate would have ranked LAST
+    assert out.score <= score_b + 1e-12
+    assert out.score < score_a
+    # and the reported score is exactly the repriced rollout
+    reprice = obj.score(0, 0, timings=ro.timings(out.batch_latencies))
+    assert out.score == pytest.approx(reprice)
+
+
+def test_stream_objective_ga_fitness_surrogate_is_gone():
+    obj = get_objective("ttft_p99")
+    with pytest.raises(RuntimeError, match="true per-request timings"):
+        obj.ga_fitness(np.ones((2, 3)), np.ones((2, 3)))
+
+
+def test_hardware_objective_goodput_end_to_end():
+    from repro.core.bo import random_point
+
+    stream, hw, ro = _ga_scenario()
+    sc = Scenario("goodput-e2e", SPEC_GA, target_tops=16, stream=stream,
+                  scheduler="orca",
+                  objective=GoodputUnderSLO(ttft_slo_s=1e9, tpot_slo_s=1e9),
+                  n_blocks=1)
+    score, out = hardware_objective(
+        sc, random_point(np.random.default_rng(0), 16),
+        GAConfig(population=8, generations=2))
+    assert score < 0.0            # negated goodput: all requests meet SLOs
+    assert np.isfinite(score)
