@@ -281,6 +281,40 @@ def bench_stream_slo(ga_cfg, n_requests: int = 8):
     }
 
 
+def bench_cosearch(ga_cfg):
+    """Cross-group co-search modes head-to-head on the shared mixed
+    prefill+decode SLO scenario (benchmarks.common.mixed_cosearch_scenario
+    — >= 2 structure groups, percentile-derived SLOs): one_sweep (the
+    historical coordinate descent) vs fixed_point (iterated sweeps,
+    warm-started elites) vs joint (one GA population over all structure
+    groups). Same scenario, same seed, same per-sweep GA budget; goodput
+    and wall-clock per mode."""
+    from repro.core.compass import search_mapping
+
+    from .common import cosearch_modes, mixed_cosearch_scenario
+
+    spec, hw, ro, mbs, obj = mixed_cosearch_scenario(
+        n_blocks=4, max_stream_iters=64, ga_cfg=ga_cfg)
+    rec = {"objective": obj.name, "rollout_batches": len(ro.batches)}
+    for name, cs in cosearch_modes().items():
+        t0 = time.perf_counter()
+        out = search_mapping(spec, ro.batches, hw, mbs, ga_cfg,
+                             objective=obj, n_blocks=4, stream_rollout=ro,
+                             co_search=cs)
+        rec[name] = {
+            "goodput_req_per_s": round(-out.score, 4),
+            "rounds": out.rounds,
+            "converged": out.converged,
+            "ga_evaluations": out.ga_evaluations,
+            "n_groups": len(out.encodings),
+            "wall_s": round(time.perf_counter() - t0, 2),
+        }
+    rec["fixed_point_over_one_sweep"] = round(
+        rec["fixed_point"]["goodput_req_per_s"]
+        / max(rec["one_sweep"]["goodput_req_per_s"], 1e-30), 4)
+    return rec
+
+
 def bench_pop_gen_sweep(budget_evals: int | None = None):
     """(population, generations) sweep at a fixed evaluation budget: the
     5-10x search-throughput headroom buys larger populations at the
@@ -406,6 +440,7 @@ def run(out_path: str | None = None, population: int | None = None,
         "stream_scenario": bench_stream_scenario(
             ga_cfg, n_gens=12 if not FULL else 50),
         "stream_slo": bench_stream_slo(ga_cfg),
+        "cosearch": bench_cosearch(ga_cfg),
     }
     if sweep:
         rec["pop_gen_sweep"] = bench_pop_gen_sweep()

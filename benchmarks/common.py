@@ -22,6 +22,57 @@ def bo_budget():
     return (100, 10) if FULL else (4, 4)  # (iters, init)
 
 
+def cosearch_modes(max_rounds_fp: int | None = None):
+    """The three comparable co-search configurations (one_sweep /
+    fixed_point / joint) shared by the serving frontier and the
+    search-throughput cosearch case."""
+    from repro.core.compass import CoSearchConfig
+
+    mr = max_rounds_fp if max_rounds_fp is not None else (6 if FULL else 3)
+    return {
+        "one_sweep": CoSearchConfig(mode="one_sweep"),
+        "fixed_point": CoSearchConfig(mode="fixed_point", max_rounds=mr),
+        "joint": CoSearchConfig(mode="joint"),
+    }
+
+
+def mixed_cosearch_scenario(n_blocks: int, max_stream_iters: int, ga_cfg):
+    """The mixed prefill+decode co-search scenario shared by
+    bench_serving and bench_search_throughput: a ShareGPT stream whose
+    rate/warm mix makes the rollout span >= 2 structure groups (early
+    batches exceed the decode micro-batch — the cross-group coupling the
+    co-search exists to resolve), with SLOs set at the 60th percentile of
+    a latency-objective pre-search so they bind without zeroing goodput
+    at this hardware scale. Returns (spec, hw, rollout, micro_batches,
+    goodput_objective)."""
+    import numpy as np
+    from repro.configs import all_archs
+    from repro.core.compass import Scenario, search_mapping
+    from repro.core.hardware import make_hardware
+    from repro.core.objectives import GoodputUnderSLO
+    from repro.core.streams import RequestStream
+    from repro.core.traces import SHAREGPT
+
+    spec = all_archs()["llama3.2-3b"].llm_spec()
+    stream = RequestStream("sharegpt-mix", trace=SHAREGPT, rate=16.0,
+                           n_requests=32, warm_fraction=0.6,
+                           max_new_tokens_cap=8, seed=0)
+    sc = Scenario("mix-cosearch", spec, target_tops=512, stream=stream,
+                  scheduler="orca", n_blocks=n_blocks,
+                  max_stream_iters=max_stream_iters)
+    hw = make_hardware(512, "L", tensor_parallel=8)
+    hw = hw.replace(layout=tuple(["WS", "OS"] * (hw.n_chiplets // 2)))
+    ro = sc.rollout()
+    mbs = [sc.micro_batch(hw, b) for b in ro.batches]
+    pre = search_mapping(spec, ro.batches, hw, mbs, ga_cfg,
+                         objective="latency", n_blocks=n_blocks)
+    tim = ro.timings(pre.batch_latencies)
+    obj = GoodputUnderSLO(
+        ttft_slo_s=float(np.percentile(tim.cold_ttft_s, 60)),
+        tpot_slo_s=float(np.percentile(tim.tpot_s, 60)))
+    return spec, hw, ro, mbs, obj
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

@@ -12,11 +12,14 @@ Typical usage::
     result = explore(sc)
 """
 from .compass import (  # noqa: F401
+    CO_SEARCH_MODES,
     CompassResult,
+    CoSearchConfig,
     MappingSearchOutput,
     Scenario,
     co_explore,
     explore,
+    get_co_search,
     hardware_objective,
     scenario_score,
     search_mapping,

@@ -24,7 +24,7 @@ mapping — the mapping must serve the *distribution*, not a single batch
 from __future__ import annotations
 
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Sequence
 
 import numpy as np
@@ -33,7 +33,7 @@ from ..serving.scheduler import Scheduler, get_scheduler
 from .bo import BOResult, HardwarePoint, bo_search
 from .encoding import MappingEncoding, as_stacked, pipeline_parallel
 from .evaluator import EvalResult, evaluate
-from .ga import GAConfig, GAResult, ga_search
+from .ga import GAConfig, GAResult, ga_search, joint_ga_search
 from .hardware import HardwareConfig, monetary_cost
 from .objectives import Objective, get_objective
 from .streams import RequestStream, StreamRollout, rollout as roll_stream
@@ -43,9 +43,64 @@ from .timing import (
     fold_request_timings,
     get_graph_and_tables,
     resolve_timing_backend,
+    splice_latencies,
 )
 from .traces import ServingWorkload, TraceDistribution, sample_batches
 from .workload import DECODE, PREFILL, LLMSpec, Request
+
+CO_SEARCH_MODES = ("one_sweep", "fixed_point", "joint")
+
+
+@dataclass(frozen=True)
+class CoSearchConfig:
+    """Cross-group co-search policy for :func:`search_mapping`.
+
+    SLO-aware (stream) fitness couples the structure groups of a scenario:
+    each candidate is scored on the *full* rollout, with batches owned by
+    other groups priced at their best-known latencies. How those
+    best-known values are refined is the co-search mode:
+
+    * ``one_sweep`` — the historical behaviour: one coordinate-descent
+      sweep over the groups in discovery order; groups searched early are
+      scored against stale (pipeline-parallel-seeded) neighbours.
+    * ``fixed_point`` — iterate sweeps until no group improves the
+      scenario objective (or ``max_rounds`` / ``max_evals`` is hit).
+      Rounds after the first warm-start each group's GA with the previous
+      round's elites (re-validated and re-scored — see
+      ``ga.validate_warm_start``) and only adopt a group's new mapping if
+      it improves the oracle-priced scenario score, so the per-round score
+      sequence is non-increasing.
+    * ``joint`` — one GA population spans all groups (one encoding per
+      group per individual, ``ga.joint_ga_search``); fitness needs no
+      best-known splicing at all.
+
+    Objectives without stream coupling (EDP / latency / energy) make the
+    groups independent, so non-``one_sweep`` modes fall back with a
+    warning."""
+
+    mode: str = "one_sweep"
+    max_rounds: int = 6          # fixed_point: sweep budget (incl. round 1)
+    rel_tol: float = 1e-4        # min relative improvement to keep iterating
+    max_evals: int | None = None  # total GA evaluations across rounds
+    warm_start: bool = True      # carry elites into later rounds
+    warm_elites: int = 8         # how many elites re-seed each group's GA
+
+    def __post_init__(self):
+        if self.mode not in CO_SEARCH_MODES:
+            raise ValueError(f"unknown co-search mode {self.mode!r}; "
+                             f"choose from {CO_SEARCH_MODES}")
+
+
+def get_co_search(spec: "CoSearchConfig | str | None") -> CoSearchConfig:
+    """Resolve a co-search mode name or config; ``None`` -> one_sweep."""
+    if isinstance(spec, CoSearchConfig):
+        return spec
+    if spec is None:
+        return CoSearchConfig()
+    if isinstance(spec, str):
+        return CoSearchConfig(mode=spec)
+    raise ValueError(f"expected CoSearchConfig, mode name or None, "
+                     f"got {spec!r}")
 
 
 @dataclass
@@ -81,6 +136,7 @@ class Scenario:
     scheduler: Scheduler | str = "orca"
     objective: Objective | str | None = None  # default for explore()
     timing_backend: "TimingBackend | str | None" = None  # oracle|dense|pallas
+    co_search: "CoSearchConfig | str | None" = None  # one_sweep|fixed_point|joint
     max_slots: int | None = None              # engine slots for the rollout
     max_stream_iters: int = 128               # rollout horizon (iterations)
     _rollout: StreamRollout | None = field(
@@ -124,6 +180,9 @@ class Scenario:
         ``pallas`` -> ``dense`` fallback applied."""
         return resolve_timing_backend(self.timing_backend)
 
+    def resolved_co_search(self) -> CoSearchConfig:
+        return get_co_search(self.co_search)
+
     def rollout(self) -> StreamRollout:
         """The scenario's workload as per-iteration batches (cached: the
         rollout is hardware-independent)."""
@@ -146,6 +205,13 @@ class Scenario:
 
 @dataclass
 class MappingSearchOutput:
+    """Result of :func:`search_mapping`. ``ga_results`` holds one entry
+    per GA run per group (one_sweep: one sweep; fixed_point: one per
+    group per round; joint: per-group *views* of the single joint run —
+    shared history/score, with the run's evaluations attributed to the
+    first entry so the list sums to ``ga_evaluations``, the authoritative
+    total)."""
+
     encodings: dict[tuple, MappingEncoding]
     latency_s: float
     energy_j: float
@@ -153,6 +219,11 @@ class MappingSearchOutput:
     score: float                      # the search objective's own score
     ga_results: list[GAResult] = field(default_factory=list)
     per_batch: list[EvalResult] = field(default_factory=list)
+    mode: str = "one_sweep"           # co-search mode actually run
+    rounds: int = 1                   # sweeps executed (joint: 1)
+    round_scores: list[float] = field(default_factory=list)
+    converged: bool = True            # fixed point reached (no group improved)
+    ga_evaluations: int = 0           # total GA evaluations across rounds
 
     @property
     def edp(self) -> float:
@@ -174,6 +245,7 @@ def search_mapping(
     use_jax: bool | None = None,
     stream_rollout: StreamRollout | None = None,
     timing_backend: "TimingBackend | str | None" = None,
+    co_search: "CoSearchConfig | str | None" = None,
 ) -> MappingSearchOutput:
     """GA mapping search shared across structurally-identical batches.
 
@@ -187,10 +259,13 @@ def search_mapping(
     per-request timings inside the GA: each candidate's per-batch
     latencies are spliced into the rollout's full latency vector (batches
     owned by *other* structure groups use the best latency known so far —
-    seeded from a pipeline-parallel mapping, tightened group by group) and
-    folded into per-request TTFT/TPOT on device, so the GA can trade
-    prefill vs decode iterations instead of minimising a total-latency
-    surrogate.
+    seeded from a pipeline-parallel mapping) and folded into per-request
+    TTFT/TPOT on device, so the GA can trade prefill vs decode iterations
+    instead of minimising a total-latency surrogate. ``co_search``
+    controls how the cross-group coupling is resolved: one coordinate-
+    descent sweep (default, the historical behaviour), a fixed-point
+    iteration of sweeps with warm-started populations, or one joint GA
+    population over all groups — see :class:`CoSearchConfig`.
 
     Execution graphs and cost tables come from the persistent
     ``repro.core.timing`` cache — a second search on the same scenario
@@ -213,6 +288,14 @@ def search_mapping(
             f"objective {obj.name!r} cannot drive the mapping GA on a "
             "fixed-batch (synthetic) rollout; use a RequestStream + "
             "scheduler")
+    cs = get_co_search(co_search)
+    if cs.mode != "one_sweep" and not obj.requires_stream:
+        warnings.warn(
+            f"co-search mode {cs.mode!r} has no effect under objective "
+            f"{obj.name!r}: without per-request stream timing the structure "
+            "groups are independent (no cross-group coupling to iterate); "
+            "falling back to one_sweep", RuntimeWarning, stacklevel=2)
+        cs = replace(cs, mode="one_sweep")
     ga_config = ga_config or GAConfig()
     # group batches by execution-graph structure
     groups: dict[tuple, list[int]] = {}
@@ -245,47 +328,202 @@ def search_mapping(
                 pipeline_parallel(rows, m_cols, hw.n_chiplets)])
             base_lat[idxs] = np.asarray(seed_lat)[:, 0]
 
-    encodings: dict[tuple, MappingEncoding] = {}
-    ga_results: list[GAResult] = []
-    per_batch: list[EvalResult | None] = [None] * len(graphs)
-    for key, idxs in groups.items():
-        rows, m_cols = key
-        group_eval = group_evals[key]
+    ctx = _SearchContext(
+        graphs=graphs, tables=tables, groups=groups,
+        group_evals=group_evals, hw=hw, obj=obj, ga_config=ga_config,
+        stream_rollout=stream_rollout, base_lat=base_lat, cs=cs)
+    if cs.mode == "joint":
+        return _search_joint(ctx)
+    return _search_rounds(ctx)
 
-        if stream_fitness:
-            def eval_fn(pop, group_eval=group_eval, idxs=idxs):
-                lat, _ = group_eval(pop)                    # (B, P)
-                lat = np.asarray(lat)
-                full = np.repeat(base_lat[None, :], lat.shape[1], axis=0)
-                full[:, idxs] = lat.T                       # (P, n_batches)
-                timings = fold_request_timings(stream_rollout, full)
-                return np.asarray(obj.score_timings(timings), dtype=float)
-        else:
-            def eval_fn(pop, group_eval=group_eval):
-                lat, en = group_eval(pop)                   # (B, P)
-                return obj.ga_fitness(np.asarray(lat), np.asarray(en))
+
+@dataclass
+class _SearchContext:
+    """Everything the co-search drivers share (built once per
+    ``search_mapping`` call)."""
+
+    graphs: list
+    tables: list
+    groups: "dict[tuple, list[int]]"
+    group_evals: "dict[tuple, object]"
+    hw: HardwareConfig
+    obj: Objective
+    ga_config: GAConfig
+    stream_rollout: StreamRollout | None
+    base_lat: np.ndarray | None
+    cs: CoSearchConfig
+
+    def stream_eval_fn(self, key):
+        """SLO fitness closure for one group: candidate latencies spliced
+        into the LIVE best-known vector (``base_lat`` is read at call
+        time, so within-round coordinate descent sees earlier groups'
+        updates) and folded into per-request timings on device."""
+        group_eval, idxs = self.group_evals[key], self.groups[key]
+
+        def eval_fn(pop):
+            lat, _ = group_eval(pop)                        # (B, P)
+            full = splice_latencies(self.base_lat, idxs,
+                                    np.asarray(lat).T)      # (P, n_batches)
+            timings = fold_request_timings(self.stream_rollout, full)
+            return np.asarray(self.obj.score_timings(timings), dtype=float)
 
         eval_fn.accepts_stacked = True
-        res = ga_search(eval_fn, rows, m_cols, hw.n_chiplets, ga_config)
-        encodings[key] = res.best
-        ga_results.append(res)
-        for i in idxs:
-            per_batch[i] = evaluate(graphs[i], res.best, hw, tables[i])
-        if stream_fitness:
-            base_lat[idxs] = [per_batch[i].latency_s for i in idxs]
+        return eval_fn
 
+    def total_eval_fn(self, key):
+        group_eval = self.group_evals[key]
+
+        def eval_fn(pop):
+            lat, en = group_eval(pop)                       # (B, P)
+            return self.obj.ga_fitness(np.asarray(lat), np.asarray(en))
+
+        eval_fn.accepts_stacked = True
+        return eval_fn
+
+    def oracle_latencies(self, key, enc) -> "list[EvalResult]":
+        """Reference-price one group's encoding per batch (the numbers
+        ``base_lat`` and the final output are built from)."""
+        return [evaluate(self.graphs[i], enc, self.hw, self.tables[i])
+                for i in self.groups[key]]
+
+    def rollout_score(self, lat_vec: np.ndarray) -> float:
+        """Scenario objective of a full per-batch latency vector."""
+        return float(self.obj.score_timings(
+            fold_request_timings(self.stream_rollout, lat_vec)))
+
+
+def _finalise(ctx: _SearchContext, encodings, ga_results, per_batch, *,
+              mode: str, rounds: int, round_scores, converged: bool,
+              ga_evaluations: int) -> MappingSearchOutput:
     lat = float(sum(r.latency_s for r in per_batch))
     en = float(sum(r.energy_j for r in per_batch))
-    mc = monetary_cost(hw)["mc_total"]
+    mc = monetary_cost(ctx.hw)["mc_total"]
     timings = None
-    if stream_rollout is not None and not stream_rollout.synthetic:
-        timings = stream_rollout.timings(
+    if ctx.stream_rollout is not None and not ctx.stream_rollout.synthetic:
+        timings = ctx.stream_rollout.timings(
             np.asarray([r.latency_s for r in per_batch]))
     return MappingSearchOutput(
         encodings=encodings, latency_s=lat, energy_j=en, mc_total=mc,
-        score=obj.score(lat, en, timings=timings),
+        score=ctx.obj.score(lat, en, timings=timings),
         ga_results=ga_results, per_batch=per_batch,
+        mode=mode, rounds=rounds, round_scores=list(round_scores),
+        converged=converged, ga_evaluations=ga_evaluations,
     )
+
+
+def _search_rounds(ctx: _SearchContext) -> MappingSearchOutput:
+    """Coordinate-descent co-search: ``one_sweep`` runs the historical
+    single pass (round 1 of ``fixed_point`` is bit-for-bit identical to
+    it — tested); ``fixed_point`` iterates sweeps until no group improves
+    the oracle-priced scenario score, warm-starting each group's GA with
+    the previous round's elites."""
+    cs, groups, obj = ctx.cs, ctx.groups, ctx.obj
+    stream_fitness = obj.requires_stream
+    n_rounds = 1 if cs.mode == "one_sweep" else max(int(cs.max_rounds), 1)
+
+    encodings: dict[tuple, MappingEncoding] = {}
+    ga_results: list[GAResult] = []
+    per_batch: list[EvalResult | None] = [None] * len(ctx.graphs)
+    warm: dict[tuple, object] = {}
+    round_scores: list[float] = []
+    evals = 0
+    rounds_done = 0
+    converged = cs.mode == "one_sweep"   # trivially: nothing to iterate
+    budget_hit = False
+
+    for rnd in range(n_rounds):
+        # the eval budget never truncates round 1: every group must be
+        # searched once for the output to cover the whole rollout
+        if rnd > 0 and cs.max_evals is not None and evals >= cs.max_evals:
+            budget_hit = True
+            break
+        improved_any = False
+        cfg = ctx.ga_config if rnd == 0 else \
+            replace(ctx.ga_config, seed=ctx.ga_config.seed + 7919 * rnd)
+        for key, idxs in groups.items():
+            rows, m_cols = key
+            eval_fn = ctx.stream_eval_fn(key) if stream_fitness \
+                else ctx.total_eval_fn(key)
+            ws = warm.get(key) if (rnd > 0 and cs.warm_start) else None
+            res = ga_search(eval_fn, rows, m_cols, ctx.hw.n_chiplets, cfg,
+                            warm_start=ws)
+            evals += res.evaluations
+            ga_results.append(res)
+            if cs.warm_start and res.final_population is not None:
+                warm[key] = res.final_population.top_k(res.final_scores,
+                                                       cs.warm_elites)
+            if rnd == 0:
+                adopt = True
+            else:
+                # guarded adoption: both sides priced consistently on the
+                # full rollout, so the round-score sequence is
+                # non-increasing by construction (property-tested)
+                cand = ctx.oracle_latencies(key, res.best)
+                trial = ctx.base_lat.copy()
+                trial[idxs] = [r.latency_s for r in cand]
+                adopt = obj.improved(ctx.rollout_score(trial),
+                                     ctx.rollout_score(ctx.base_lat),
+                                     cs.rel_tol)
+            if adopt:
+                encodings[key] = res.best
+                results = ctx.oracle_latencies(key, res.best) if rnd == 0 \
+                    else cand
+                for i, r in zip(idxs, results):
+                    per_batch[i] = r
+                if stream_fitness:
+                    ctx.base_lat[idxs] = [r.latency_s for r in results]
+                if rnd > 0:
+                    improved_any = True
+            if rnd > 0 and cs.max_evals is not None \
+                    and evals >= cs.max_evals:
+                budget_hit = True
+                break
+        rounds_done = rnd + 1
+        if stream_fitness:
+            round_scores.append(ctx.rollout_score(ctx.base_lat))
+        if budget_hit:
+            break
+        if rnd > 0 and not improved_any:
+            converged = True
+            break
+
+    return _finalise(
+        ctx, encodings, ga_results, per_batch,
+        mode=cs.mode, rounds=rounds_done,
+        round_scores=round_scores, converged=converged,
+        ga_evaluations=evals)
+
+
+def _search_joint(ctx: _SearchContext) -> MappingSearchOutput:
+    """Joint co-search: one GA population spans every structure group —
+    each individual is a whole-scenario mapping, scored on its own full
+    latency vector (no best-known splicing)."""
+    from .jax_evaluator import JointStreamEvaluator
+
+    jse = JointStreamEvaluator(ctx.group_evals, ctx.groups,
+                               ctx.stream_rollout, ctx.obj)
+    res = joint_ga_search(jse.scores, {k: k for k in ctx.groups},
+                          ctx.hw.n_chiplets, ctx.ga_config)
+
+    encodings: dict[tuple, MappingEncoding] = {}
+    ga_results: list[GAResult] = []
+    per_batch: list[EvalResult | None] = [None] * len(ctx.graphs)
+    for gi, (key, idxs) in enumerate(ctx.groups.items()):
+        enc = res.best[key]
+        encodings[key] = enc
+        for i, r in zip(idxs, ctx.oracle_latencies(key, enc)):
+            per_batch[i] = r
+        # per-group views of ONE joint run: evaluations attributed to the
+        # first view so sum(r.evaluations) == ga_evaluations
+        ga_results.append(GAResult(
+            best=enc, best_score=res.best_score, history=res.history,
+            evaluations=res.evaluations if gi == 0 else 0))
+    final = ctx.rollout_score(
+        np.asarray([r.latency_s for r in per_batch]))
+    return _finalise(
+        ctx, encodings, ga_results, per_batch,
+        mode="joint", rounds=1, round_scores=[final], converged=True,
+        ga_evaluations=res.evaluations)
 
 
 def _make_population_eval(graphs, tables, hw, use_jax: bool | None,
@@ -363,10 +601,11 @@ def hardware_objective(
     objective: Objective | str | None = None,
     use_jax: bool | None = None,
     timing_backend: "TimingBackend | str | None" = None,
+    co_search: "CoSearchConfig | str | None" = None,
 ) -> tuple[float, MappingSearchOutput]:
     """Fitness of one hardware point: mapping search under the scenario's
     rollout, scored by ``objective`` (default: the scenario's, else
-    EDP·MC). ``timing_backend`` overrides the scenario's."""
+    EDP·MC). ``timing_backend`` / ``co_search`` override the scenario's."""
     obj = scenario.resolved_objective() if objective is None \
         else get_objective(objective)
     hw = point.to_config(scenario.target_tops)
@@ -380,11 +619,13 @@ def hardware_objective(
     mbs = [scenario.micro_batch(hw, b) for b in batches]
     backend = scenario.resolved_backend() if timing_backend is None \
         else resolve_timing_backend(timing_backend)
+    cs = scenario.resolved_co_search() if co_search is None \
+        else get_co_search(co_search)
     out = search_mapping(scenario.spec, batches, hw, mbs, ga_config,
                          objective=obj.inner(), n_blocks=scenario.n_blocks,
                          use_jax=use_jax,
                          stream_rollout=None if ro.synthetic else ro,
-                         timing_backend=backend)
+                         timing_backend=backend, co_search=cs)
     score = scenario_score(scenario, obj, out.latency_s, out.energy_j,
                            out.mc_total, out.batch_latencies)
     return score, out
@@ -399,14 +640,16 @@ def explore(
     seed: int = 0,
     use_jax: bool | None = None,
     timing_backend: "TimingBackend | str | None" = None,
+    co_search: "CoSearchConfig | str | None" = None,
 ) -> CompassResult:
     """Full Compass loop (Eq. 1): BO over hardware, GA over mappings, the
     scenario's stream rolled out under its scheduler as the workload.
 
     The single declarative entry point: everything workload-related lives
     on the ``Scenario`` (``stream=``, ``scheduler=``, ``objective=``,
-    ``timing_backend=``); ``objective``/``timing_backend`` here override
-    the scenario's defaults when given.
+    ``timing_backend=``, ``co_search=``); ``objective`` /
+    ``timing_backend`` / ``co_search`` here override the scenario's
+    defaults when given.
     """
     cache: dict[tuple, tuple[float, MappingSearchOutput]] = {}
 
@@ -415,7 +658,7 @@ def explore(
         if key not in cache:
             cache[key] = hardware_objective(scenario, point, ga_config,
                                             objective, use_jax,
-                                            timing_backend)
+                                            timing_backend, co_search)
         return cache[key][0]
 
     bo = bo_search(obj, scenario.target_tops, iters=bo_iters,

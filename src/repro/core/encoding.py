@@ -117,6 +117,13 @@ class StackedPopulation:
         return MappingEncoding(self.segmentation[i].copy(),
                                self.layer_to_chip[i].copy())
 
+    def top_k(self, scores, k: int) -> "StackedPopulation":
+        """The k best individuals under ``scores`` (lower = better) as a
+        new population — the elite carrier between co-search rounds."""
+        order = np.argsort(np.asarray(scores, dtype=float))[: max(int(k), 0)]
+        return StackedPopulation(self.segmentation[order].copy(),
+                                 self.layer_to_chip[order].copy())
+
 
 def as_stacked(population) -> StackedPopulation:
     if isinstance(population, StackedPopulation):

@@ -53,6 +53,23 @@ class GAResult:
     best_score: float
     history: list[float] = field(default_factory=list)
     evaluations: int = 0
+    # final generation, for elite re-seeding across co-search rounds
+    # (compass fixed-point loop); None for the non-GA searchers below
+    final_population: StackedPopulation | None = None
+    final_scores: np.ndarray | None = None
+
+
+@dataclass
+class JointGAResult:
+    """Result of :func:`joint_ga_search` — one best encoding per structure
+    group (index-aligned: they came from the same joint individual)."""
+
+    best: "dict[tuple, MappingEncoding]"
+    best_score: float
+    history: list[float] = field(default_factory=list)
+    evaluations: int = 0
+    final_populations: "dict[tuple, StackedPopulation] | None" = None
+    final_scores: np.ndarray | None = None
 
 
 # --- Table III mutation operators --------------------------------------------
@@ -231,13 +248,17 @@ def crossover_population(rng, seg_a, l2c_a, seg_b,
 
 
 def mutate_population(rng, pop: StackedPopulation, n_chips: int,
-                      progress: float, rate: float = 1.0) -> None:
+                      progress: float, rate: float = 1.0,
+                      mask: np.ndarray | None = None) -> None:
     """Vectorised phase-adaptive mutation, in place on the stacked arrays.
     Each individual mutates with probability ``rate``; operator and
-    segmentation-mutation probabilities match ``mutate``."""
+    segmentation-mutation probabilities match ``mutate``. ``mask`` (a (P,)
+    bool array) overrides the ``rate`` draw — joint cross-group search uses
+    it to mutate each individual in exactly one structure group."""
     seg, l2c = pop.segmentation, pop.layer_to_chip
     p, rows, m_cols = l2c.shape
-    do = rng.random(p) < rate
+    do = np.asarray(mask, dtype=bool) if mask is not None \
+        else rng.random(p) < rate
     ops = rng.choice(len(_L2C_OPS), size=p, p=_op_weights(progress))
 
     idx = np.nonzero(do & (ops == 0))[0]                  # op1: replace one
@@ -312,12 +333,35 @@ def seed_population(rng, rows: int, m_cols: int, n_chips: int,
     return pop[:size]
 
 
+def validate_warm_start(encodings, rows: int, m_cols: int,
+                        n_chips: int) -> list[MappingEncoding]:
+    """Filter warm-start encodings before re-seeding a GA population:
+    wrong-shape or out-of-bounds individuals (a group whose shape or chip
+    count differs from the carrier's) are dropped, and survivors are
+    copied so the new search cannot alias the previous round's arrays.
+
+    Validity is structural only — carried elites carry NO score: the
+    best-known latency vector of other structure groups may have changed
+    since they were ranked, so ``ga_search`` always re-scores the warm
+    population against the current fitness (stale-elite contamination is
+    tested in tests/test_ga.py)."""
+    if isinstance(encodings, StackedPopulation):
+        encodings = encodings.to_encodings()
+    out = []
+    for enc in encodings:
+        if enc.layer_to_chip.shape == (rows, m_cols) \
+                and enc.validate(n_chips):
+            out.append(enc.copy())
+    return out
+
+
 def ga_search(
     eval_fn: Callable[[Sequence[MappingEncoding]], np.ndarray],
     rows: int,
     m_cols: int,
     n_chips: int,
     config: GAConfig | None = None,
+    warm_start=None,
 ) -> GAResult:
     """Minimise ``eval_fn`` (vectorised over a population) over the mapping
     space. Lower score = better.
@@ -325,11 +369,24 @@ def ga_search(
     The loop is population-batched end to end: selection / crossover /
     mutation operate on the stacked arrays, and ``eval_fn`` receives the
     whole ``StackedPopulation`` when it advertises ``accepts_stacked``
-    (one jitted device call per generation), else a list of encodings."""
+    (one jitted device call per generation), else a list of encodings.
+
+    ``warm_start`` (a ``StackedPopulation`` or encoding list, typically the
+    previous co-search round's elites) seeds the front of the initial
+    population after :func:`validate_warm_start`; the remainder is the
+    usual paradigm + random seeding. Warm individuals are re-scored by the
+    initial ``score_population`` call — their previous-round scores are
+    stale whenever the cross-group best-known latency vector moved."""
     cfg = config or GAConfig()
     rng = np.random.default_rng(cfg.seed)
-    pop = StackedPopulation.from_encodings(
-        seed_population(rng, rows, m_cols, n_chips, cfg.population))
+    init: list[MappingEncoding] = []
+    if warm_start is not None:
+        init = validate_warm_start(warm_start, rows, m_cols,
+                                   n_chips)[: cfg.population]
+    if len(init) < cfg.population:
+        init += seed_population(rng, rows, m_cols, n_chips,
+                                cfg.population - len(init))
+    pop = StackedPopulation.from_encodings(init)
     scores = score_population(eval_fn, pop)
     n_eval = len(pop)
     history = [float(scores.min())]
@@ -363,7 +420,98 @@ def ga_search(
     best_i = int(np.argmin(scores))
     return GAResult(best=pop.individual(best_i),
                     best_score=float(scores[best_i]),
-                    history=history, evaluations=n_eval)
+                    history=history, evaluations=n_eval,
+                    final_population=pop,
+                    final_scores=np.asarray(scores, dtype=float))
+
+
+def joint_ga_search(
+    eval_fn: Callable,
+    shapes: "dict[tuple, tuple[int, int]]",
+    n_chips: int,
+    config: GAConfig | None = None,
+) -> JointGAResult:
+    """One GA population spanning every structure group of a scenario
+    (joint cross-group co-search). Individual ``i`` is the tuple of group
+    encodings ``(pops[key][i] for key in shapes)`` — the concatenated
+    segment encoding of the whole scenario.
+
+    Selection and crossover act on *shared* parent indices and a shared
+    crossover mask, so a child's cross-group genotype stays coupled; each
+    mutated individual mutates in exactly one uniformly-drawn group (the
+    per-group mutation mask of ``mutate_population``), keeping per-step
+    mutation strength comparable to the per-group GA.
+
+    ``eval_fn`` receives the dict of index-aligned ``StackedPopulation``
+    and returns (P,) minimised scores — no best-known splicing is
+    involved, every group's latency comes from the same candidate. With a
+    single group the rng draw sequence is identical to :func:`ga_search`
+    (joint == spliced one-sweep, tested in tests/test_coexplore.py)."""
+    cfg = config or GAConfig()
+    rng = np.random.default_rng(cfg.seed)
+    keys = list(shapes)
+    n_groups = len(keys)
+    pops = {}
+    for k in keys:
+        rows, m_cols = shapes[k]
+        pops[k] = StackedPopulation.from_encodings(
+            seed_population(rng, rows, m_cols, n_chips, cfg.population))
+    scores = np.asarray(eval_fn(pops), dtype=float)
+    n_eval = cfg.population
+    history = [float(scores.min())]
+
+    for gen in range(cfg.generations):
+        progress = gen / max(cfg.generations - 1, 1)
+        order = np.argsort(scores)
+        elite = order[: cfg.elite]
+        elites = {k: (pops[k].segmentation[elite].copy(),
+                      pops[k].layer_to_chip[elite].copy()) for k in keys}
+
+        n_child = max(0, cfg.population - cfg.elite)
+        p1 = tournament_select(rng, scores, cfg.tournament_k, n_child)
+        p2 = tournament_select(rng, scores, cfg.tournament_k, n_child)
+        crossed = {}
+        for k in keys:
+            pop = pops[k]
+            crossed[k] = crossover_population(
+                rng, pop.segmentation[p1], pop.layer_to_chip[p1],
+                pop.segmentation[p2], pop.layer_to_chip[p2])
+        do_cx = rng.random(n_child) < cfg.crossover_rate
+        children = {}
+        for k in keys:
+            c_seg, c_l2c = crossed[k]
+            pop = pops[k]
+            c_seg = np.where(do_cx[:, None], c_seg, pop.segmentation[p1])
+            c_l2c = np.where(do_cx[:, None, None], c_l2c,
+                             pop.layer_to_chip[p1])
+            children[k] = StackedPopulation(c_seg, c_l2c)
+        if n_groups == 1:
+            mutate_population(rng, children[keys[0]], n_chips, progress,
+                              rate=cfg.mutation_rate)
+        else:
+            do = rng.random(n_child) < cfg.mutation_rate
+            grp = rng.integers(n_groups, size=n_child)
+            for gi, k in enumerate(keys):
+                mutate_population(rng, children[k], n_chips, progress,
+                                  mask=do & (grp == gi))
+
+        pops = {
+            k: StackedPopulation(
+                np.concatenate([elites[k][0], children[k].segmentation]),
+                np.concatenate([elites[k][1], children[k].layer_to_chip]))
+            for k in keys
+        }
+        scores = np.asarray(eval_fn(pops), dtype=float)
+        n_eval += cfg.population
+        history.append(float(scores.min()))
+
+    best_i = int(np.argmin(scores))
+    return JointGAResult(
+        best={k: pops[k].individual(best_i) for k in keys},
+        best_score=float(scores[best_i]),
+        history=history, evaluations=n_eval,
+        final_populations=pops,
+        final_scores=np.asarray(scores, dtype=float))
 
 
 def simulated_annealing_search(

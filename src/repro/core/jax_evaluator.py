@@ -61,6 +61,7 @@ from .timing import (
     TimingBackend,
     TimingMatrix,
     dense_pass_b,
+    fold_request_timings,
     padded_predecessor_columns,
     resolve_timing_backend,
 )
@@ -500,3 +501,49 @@ class GroupPopulationEvaluator:
             op_start_s=end - np.asarray(tproc, np.float64) * scale,
             op_end_s=end,
             chip_free_s=np.asarray(free, np.float64) * scale)
+
+
+@dataclass
+class JointStreamEvaluator:
+    """Whole-scenario SLO fitness for joint-mode cross-group co-search.
+
+    A joint GA individual carries one encoding per structure group; this
+    evaluator runs every group's population evaluator (one jitted call per
+    group per generation), assembles the scenario's full (P, n_batches)
+    per-iteration latency matrix — NO best-known splicing: every batch's
+    latency comes from the same joint candidate — and folds it into
+    per-request timings in one jitted ``timing.fold_request_timings``
+    call, scored by the SLO objective.
+
+    ``group_evals`` maps group key -> ``eval(pop) -> ((B, P) latency_s,
+    (B, P) energy_j)`` — a ``GroupPopulationEvaluator.evaluate_population``
+    or the numpy-oracle fallback, so joint mode works on every timing
+    backend; ``groups`` maps group key -> rollout batch indices."""
+
+    group_evals: "dict[tuple, object]"
+    groups: "dict[tuple, list[int]]"
+    rollout: object
+    objective: object
+
+    @property
+    def n_batches(self) -> int:
+        return sum(len(v) for v in self.groups.values())
+
+    def latency_matrix(self, pops: "dict[tuple, object]") -> np.ndarray:
+        """(P, n_batches) per-iteration latencies of the joint population
+        (``pops``: group key -> index-aligned ``StackedPopulation``)."""
+        full = None
+        for key, idxs in self.groups.items():
+            lat, _ = self.group_evals[key](pops[key])    # (B, P)
+            lat = np.asarray(lat, dtype=float)
+            if full is None:
+                full = np.empty((lat.shape[1], self.n_batches))
+            full[:, idxs] = lat.T
+        return full
+
+    def scores(self, pops: "dict[tuple, object]") -> np.ndarray:
+        """(P,) minimised SLO scores of the joint population."""
+        timings = fold_request_timings(self.rollout,
+                                       self.latency_matrix(pops))
+        return np.asarray(self.objective.score_timings(timings),
+                          dtype=float)

@@ -53,6 +53,18 @@ class Objective:
     def ga_fitness(self, lat: np.ndarray, en: np.ndarray) -> np.ndarray:
         raise NotImplementedError
 
+    @staticmethod
+    def improved(new: float, old: float, rel_tol: float = 0.0) -> bool:
+        """``new`` is a strict improvement over ``old`` (both minimised
+        scores) beyond a relative tolerance scaled by ``|old|`` — correct
+        for negated maximised scores (goodput) as well as positive EDP /
+        latency scores. The co-search fixed-point loop uses this for both
+        adoption and convergence."""
+        new, old = float(new), float(old)
+        if not np.isfinite(old):
+            return bool(np.isfinite(new) or new < old)
+        return bool(new < old - rel_tol * abs(old))
+
     def _timings(self, timings: RequestTimings | None) -> RequestTimings:
         if timings is None:
             raise ValueError(

@@ -25,7 +25,7 @@ nothing running) take zero modelled time.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Sequence
 
 import numpy as np
@@ -92,6 +92,17 @@ class RequestStream:
     @property
     def is_fixed(self) -> bool:
         return self.batches is not None
+
+    def with_rate(self, rate: float) -> "RequestStream":
+        """The same stream at a different offered load — the unit step of
+        an arrival-rate sweep (multi-rate goodput frontiers). Only
+        distribution-mode streams have an arrival process to re-rate."""
+        if self.is_fixed or self.requests is not None:
+            raise ValueError(
+                f"stream {self.name!r} has no arrival process (fixed "
+                "batches or an explicit request list); with_rate needs a "
+                "distribution-mode stream")
+        return replace(self, rate=float(rate))
 
     def sample(self, seed: int | None = None) -> list[StreamRequest]:
         """Materialise the request list (deterministic for a fixed seed)."""

@@ -53,7 +53,7 @@ __all__ = [
     "OracleTimingBackend", "DenseTimingBackend", "PallasTimingBackend",
     "TIMING_BACKENDS", "get_timing_backend", "resolve_timing_backend",
     "padded_predecessor_columns", "padded_predecessor_positions",
-    "dense_pass_b", "fold_request_timings",
+    "dense_pass_b", "fold_request_timings", "splice_latencies",
     "get_execution_graph", "get_cost_tables", "get_graph_and_tables",
     "cost_cache_stats", "clear_cost_caches",
 ]
@@ -318,6 +318,21 @@ def resolve_timing_backend(spec: "TimingBackend | str | None" = None,
 # --------------------------------------------------------------------------
 # On-device per-request timing fold (rollout pricing inside the GA loop)
 # --------------------------------------------------------------------------
+
+
+def splice_latencies(base_lat, idxs, cand_lat) -> np.ndarray:
+    """Splice one structure group's candidate latencies into the rollout's
+    best-known per-batch latency vector: ``base_lat`` (N,) best-known
+    latencies, ``cand_lat`` (P, k) candidate latencies for the batches at
+    positions ``idxs`` -> (P, N) full latency matrices, one per candidate.
+    This is the coordinate-descent coupling of the cross-group co-search
+    (compass fixed-point loop); joint mode assembles the matrix from every
+    group's own candidates instead and never calls this."""
+    cand = np.asarray(cand_lat, dtype=float)
+    full = np.repeat(np.asarray(base_lat, dtype=float)[None, :],
+                     cand.shape[0], axis=0)
+    full[:, idxs] = cand
+    return full
 
 
 _FOLD_CACHE: dict[int, object] = {}

@@ -1,9 +1,50 @@
 import os
 import sys
+import time
+
+import pytest
 
 # keep smoke tests on 1 device — only the dry-run uses 512 fake devices
 os.environ.pop("XLA_FLAGS", None)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# ---------------------------------------------------------------------------
+# Tier-1 wall-clock budget audit
+#
+# Tier-1 (COMPASS_FULL=0) must stay fast: any test that runs longer than
+# REPRO_TEST_BUDGET_S (default 120 s) without a `slow` marker is reported in
+# the terminal summary, and fails the session when
+# REPRO_ENFORCE_TEST_BUDGET=1 (set by CI) — the fix is to mark the case
+# `slow` so the scheduled slow job picks it up, or to shrink its budget.
+# The whole runtest protocol is timed (setup + call + teardown), so
+# expensive fixtures count against the first test that builds them.
+# ---------------------------------------------------------------------------
+
+_BUDGET_S = float(os.environ.get("REPRO_TEST_BUDGET_S", "120"))
+_budget_offenders: "list[tuple[str, float]]" = []
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_protocol(item, nextitem):
+    t0 = time.perf_counter()
+    yield
+    took = time.perf_counter() - t0
+    if took > _BUDGET_S and item.get_closest_marker("slow") is None:
+        _budget_offenders.append((item.nodeid, took))
+
+
+def pytest_terminal_summary(terminalreporter):
+    if _budget_offenders:
+        terminalreporter.section("tier-1 wall-clock budget audit")
+        for nodeid, took in _budget_offenders:
+            terminalreporter.write_line(
+                f"{nodeid}: {took:.1f}s > {_BUDGET_S:.0f}s budget — mark it "
+                "@pytest.mark.slow or shrink it")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _budget_offenders and os.environ.get("REPRO_ENFORCE_TEST_BUDGET"):
+        session.exitstatus = max(int(exitstatus), 1)
 
 # ---------------------------------------------------------------------------
 # Offline hypothesis shim

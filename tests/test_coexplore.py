@@ -1,0 +1,208 @@
+"""Cross-group co-search (fixed-point + joint modes) — property tests.
+
+The properties pinned here are the contract of the co-search subsystem:
+
+* round 1 of the fixed-point loop IS the historical one-sweep path,
+  bit for bit;
+* the per-round scenario score sequence is monotone non-increasing
+  (guarded adoption prices both sides consistently);
+* joint mode with a single structure group is bit-for-bit the spliced
+  one-sweep search (with one group there is nothing to splice, and the
+  joint GA's rng draw sequence collapses to ``ga_search``'s).
+"""
+import numpy as np
+import pytest
+
+from repro.core.compass import (
+    CoSearchConfig,
+    Scenario,
+    explore,
+    get_co_search,
+    hardware_objective,
+    search_mapping,
+)
+from repro.core.ga import GAConfig
+from repro.core.hardware import make_hardware
+from repro.core.objectives import GoodputUnderSLO
+from repro.core.streams import RequestStream
+from repro.core.traces import TraceDistribution
+from repro.core.workload import LLMSpec
+
+SPEC = LLMSpec("tiny", 512, 8, 8, 64, 2048, 32000, 8)
+SMALL = TraceDistribution("small", mean_input=48, mean_output=12, max_len=256)
+HW = make_hardware(64, "M", tensor_parallel=2)
+OBJ = GoodputUnderSLO(ttft_slo_s=0.5, tpot_slo_s=0.1)
+CFG = GAConfig(population=8, generations=3, seed=0)
+
+
+def _scenario(n_requests=32, rate=16.0, warm_fraction=0.6, seed=3,
+              scheduler="orca"):
+    st = RequestStream("coex", trace=SMALL, rate=rate, n_requests=n_requests,
+                       warm_fraction=warm_fraction, max_new_tokens_cap=6,
+                       seed=seed)
+    return Scenario("coex", SPEC, target_tops=64, stream=st,
+                    scheduler=scheduler, objective=OBJ, n_blocks=1,
+                    max_stream_iters=32)
+
+
+def _searched(sc, co_search, cfg=CFG):
+    ro = sc.rollout()
+    mbs = [sc.micro_batch(HW, b) for b in ro.batches]
+    return search_mapping(SPEC, ro.batches, HW, mbs, cfg, objective=OBJ,
+                          n_blocks=1, stream_rollout=ro, co_search=co_search)
+
+
+@pytest.fixture(scope="module")
+def multi_group():
+    """A mixed prefill+decode stream whose rollout spans >= 2 structure
+    groups (early iterations exceed the decode micro-batch, later ones
+    do not)."""
+    sc = _scenario()
+    out = _searched(sc, None)
+    assert len(out.encodings) >= 2, "scenario must span several groups"
+    return sc, out
+
+
+@pytest.fixture(scope="module")
+def single_group():
+    sc = _scenario(n_requests=6, rate=1.0, warm_fraction=0.3, seed=1)
+    out = _searched(sc, None)
+    assert len(out.encodings) == 1
+    return sc, out
+
+
+def _same_encodings(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        assert np.array_equal(a[k].layer_to_chip, b[k].layer_to_chip)
+        assert np.array_equal(a[k].segmentation, b[k].segmentation)
+
+
+def test_round1_equals_one_sweep_bit_for_bit(multi_group):
+    sc, one = multi_group
+    fp1 = _searched(sc, CoSearchConfig(mode="fixed_point", max_rounds=1))
+    assert fp1.score == one.score
+    assert fp1.latency_s == one.latency_s
+    assert fp1.energy_j == one.energy_j
+    _same_encodings(fp1.encodings, one.encodings)
+    # and the first round of a longer fixed-point run is that same sweep
+    fp = _searched(sc, CoSearchConfig(mode="fixed_point", max_rounds=4))
+    assert fp.round_scores[0] == one.round_scores[0]
+
+
+def test_fixed_point_monotone_non_increasing(multi_group):
+    sc, one = multi_group
+    fp = _searched(sc, CoSearchConfig(mode="fixed_point", max_rounds=5))
+    rs = fp.round_scores
+    assert len(rs) == fp.rounds >= 2
+    assert all(rs[i + 1] <= rs[i] + 1e-12 for i in range(len(rs) - 1))
+    # the fixed point can never be worse than the one-sweep baseline
+    assert fp.score <= one.score + 1e-9
+    assert fp.mode == "fixed_point"
+
+
+def test_fixed_point_converges(multi_group):
+    sc, _ = multi_group
+    fp = _searched(sc, CoSearchConfig(mode="fixed_point", max_rounds=6))
+    assert fp.converged
+    # convergence means the LAST executed round improved nothing
+    assert fp.rounds <= 6
+
+
+def test_joint_equals_spliced_when_single_group(single_group):
+    sc, one = single_group
+    jt = _searched(sc, "joint")
+    assert jt.mode == "joint"
+    assert jt.score == one.score
+    _same_encodings(jt.encodings, one.encodings)
+
+
+def test_joint_multi_group_runs(multi_group):
+    sc, _ = multi_group
+    jt = _searched(sc, "joint")
+    assert len(jt.encodings) >= 2
+    assert np.isfinite(jt.score)
+    assert jt.ga_evaluations == CFG.population * (CFG.generations + 1)
+
+
+def test_non_stream_objective_falls_back_to_one_sweep(multi_group):
+    sc, _ = multi_group
+    ro = sc.rollout()
+    mbs = [sc.micro_batch(HW, b) for b in ro.batches]
+    with pytest.warns(RuntimeWarning, match="no effect under objective"):
+        out = search_mapping(SPEC, ro.batches, HW, mbs, CFG, objective="edp",
+                             n_blocks=1, co_search="fixed_point")
+    assert out.mode == "one_sweep"
+    assert out.rounds == 1
+
+
+def test_eval_budget_stops_iteration(multi_group):
+    sc, _ = multi_group
+    # budget below one sweep: round 1 still completes in full (every
+    # group must be searched once), then the loop stops un-converged
+    fp = _searched(sc, CoSearchConfig(mode="fixed_point", max_rounds=6,
+                                      max_evals=1))
+    assert fp.rounds == 1
+    assert not fp.converged
+    assert all(v is not None for v in fp.per_batch)
+
+
+def test_get_co_search_resolution():
+    assert get_co_search(None).mode == "one_sweep"
+    assert get_co_search("joint").mode == "joint"
+    cfg = CoSearchConfig(mode="fixed_point", max_rounds=3)
+    assert get_co_search(cfg) is cfg
+    with pytest.raises(ValueError, match="unknown co-search mode"):
+        get_co_search("both_at_once")
+    with pytest.raises(ValueError):
+        get_co_search(42)
+
+
+def test_scenario_threads_co_search(multi_group):
+    sc, _ = multi_group
+    from repro.core.bo import random_point
+
+    sc2 = Scenario("coex-fp", SPEC, target_tops=64, stream=sc.stream,
+                   scheduler="orca", objective=OBJ, n_blocks=1,
+                   max_stream_iters=32,
+                   co_search=CoSearchConfig(mode="fixed_point",
+                                            max_rounds=3))
+    pt = random_point(np.random.default_rng(0), 64)
+    score, out = hardware_objective(sc2, pt, CFG)
+    assert out.mode == "fixed_point"
+    assert np.isfinite(score)
+
+
+# --- end-to-end cases (scheduled slow CI job; see pytest.ini) ---------------
+
+
+@pytest.mark.slow
+def test_fixed_point_explore_end_to_end():
+    sc = _scenario()
+    sc = Scenario(sc.name, SPEC, target_tops=64, stream=sc.stream,
+                  scheduler="orca", objective=OBJ, n_blocks=1,
+                  max_stream_iters=32, co_search="fixed_point")
+    res = explore(sc, bo_iters=1, bo_init=2, ga_config=CFG, seed=0)
+    assert res.mapping.mode == "fixed_point"
+    assert np.isfinite(res.bo.best_score)
+
+
+@pytest.mark.slow
+def test_goodput_frontier_end_to_end():
+    """A miniature multi-rate frontier: goodput per (rate, co-search
+    mode); fixed-point must dominate one-sweep at every rate."""
+    from repro.core.bo import random_point
+
+    pt = random_point(np.random.default_rng(0), 64)
+    base = RequestStream("front", trace=SMALL, rate=1.0, n_requests=12,
+                         warm_fraction=0.4, max_new_tokens_cap=4, seed=2)
+    for rate in (0.5, 2.0):
+        goodput = {}
+        for mode in ("one_sweep", "fixed_point"):
+            sc = Scenario(f"front-{rate}-{mode}", SPEC, target_tops=64,
+                          stream=base.with_rate(rate), scheduler="orca",
+                          objective=OBJ, n_blocks=1, max_stream_iters=32,
+                          co_search=CoSearchConfig(mode=mode, max_rounds=3))
+            score, out = hardware_objective(sc, pt, CFG)
+            goodput[mode] = -score
+        assert goodput["fixed_point"] >= goodput["one_sweep"] - 1e-9

@@ -1,13 +1,18 @@
-"""Mapping encoding scheme (paper §IV) — unit + property tests."""
+"""Mapping encoding scheme (paper §IV) — unit + property tests, including
+the per-operator GA invariants (all seven Table III operators and
+crossover preserve chip bounds and segment structure) and the stacked
+round-trip (decode(encode(x)) == x)."""
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core.encoding import (
+    StackedPopulation,
     data_parallel,
     model_parallel,
     pipeline_parallel,
     random_encoding,
 )
+from repro.core.ga import _L2C_OPS, _seg_mutate, crossover
 
 
 def test_segments_all_zero_is_single_segment():
@@ -65,3 +70,107 @@ def test_random_encoding_valid_and_order_is_permutation(rows, cols, chips, seed)
     order = enc.scheduled_order()
     assert len(order) == rows * cols
     assert len({tuple(x) for x in order}) == rows * cols
+
+
+# --- GA operator invariants (Table III ops 1-7, seg mutation, crossover) ----
+
+
+def _assert_segments_partition(enc):
+    """segments() is a contiguous partition of [0, n_cols)."""
+    segs = enc.segments()
+    assert segs[0][0] == 0 and segs[-1][1] == enc.n_cols
+    for (_, hi), (lo, _) in zip(segs, segs[1:]):
+        assert hi == lo
+    assert all(lo < hi for lo, hi in segs)
+
+
+@settings(max_examples=70, deadline=None)
+@given(rows=st.integers(1, 5), cols=st.integers(1, 10),
+       chips=st.integers(1, 8), seed=st.integers(0, 10_000),
+       op=st.integers(0, 6))
+def test_each_l2c_operator_preserves_invariants(rows, cols, chips, seed, op):
+    rng = np.random.default_rng(seed)
+    enc = random_encoding(rng, rows, cols, chips)
+    seg_before = enc.segmentation.copy()
+    _L2C_OPS[op](rng, enc, chips)
+    assert enc.validate(chips)
+    assert enc.layer_to_chip.shape == (rows, cols)
+    # layer_to_chip operators must never touch the segmentation bits
+    assert np.array_equal(enc.segmentation, seg_before)
+    _assert_segments_partition(enc)
+
+
+@settings(max_examples=50, deadline=None)
+@given(rows=st.integers(1, 5), cols=st.integers(1, 10),
+       chips=st.integers(1, 8), seed=st.integers(0, 10_000))
+def test_seg_mutation_preserves_invariants(rows, cols, chips, seed):
+    rng = np.random.default_rng(seed)
+    enc = random_encoding(rng, rows, cols, chips)
+    l2c_before = enc.layer_to_chip.copy()
+    _seg_mutate(rng, enc)
+    assert enc.validate(chips)
+    assert enc.segmentation.shape == (max(cols - 1, 0),)
+    assert np.isin(enc.segmentation, (0, 1)).all()
+    # segmentation mutation must never touch layer_to_chip
+    assert np.array_equal(enc.layer_to_chip, l2c_before)
+    _assert_segments_partition(enc)
+
+
+@settings(max_examples=50, deadline=None)
+@given(rows=st.integers(1, 5), cols=st.integers(1, 10),
+       chips=st.integers(1, 8), seed=st.integers(0, 10_000))
+def test_crossover_child_slices_come_from_parents(rows, cols, chips, seed):
+    rng = np.random.default_rng(seed)
+    a = random_encoding(rng, rows, cols, chips)
+    b = random_encoding(rng, rows, cols, chips)
+    child = crossover(rng, a, b)
+    assert child.validate(chips)
+    _assert_segments_partition(child)
+    # each segmentation bit comes from a parent
+    for i, bit in enumerate(child.segmentation):
+        assert bit in (a.segmentation[i], b.segmentation[i])
+    # each (row, child-segment) slice is inherited intact from one parent
+    for lo, hi in child.segments():
+        for r in range(rows):
+            sl = child.layer_to_chip[r, lo:hi]
+            assert (np.array_equal(sl, a.layer_to_chip[r, lo:hi])
+                    or np.array_equal(sl, b.layer_to_chip[r, lo:hi]))
+
+
+# --- stacked round-trip: decode(encode(x)) == x -----------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=st.integers(1, 5), cols=st.integers(1, 10),
+       chips=st.integers(1, 8), size=st.integers(1, 12),
+       seed=st.integers(0, 10_000))
+def test_stacked_population_roundtrip(rows, cols, chips, size, seed):
+    rng = np.random.default_rng(seed)
+    encs = [random_encoding(rng, rows, cols, chips) for _ in range(size)]
+    pop = StackedPopulation.from_encodings(encs)
+    back = pop.to_encodings()
+    assert len(pop) == len(back) == size
+    for x, y in zip(encs, back):
+        assert np.array_equal(x.segmentation, y.segmentation)
+        assert np.array_equal(x.layer_to_chip, y.layer_to_chip)
+    for i in (0, size - 1):
+        ind = pop.individual(i)
+        assert np.array_equal(ind.layer_to_chip, encs[i].layer_to_chip)
+        # individual() copies: mutating it cannot write back into the stack
+        ind.layer_to_chip[0, 0] = (ind.layer_to_chip[0, 0] + 1) % max(chips, 2)
+        assert np.array_equal(pop.layer_to_chip[i], encs[i].layer_to_chip)
+
+
+@settings(max_examples=30, deadline=None)
+@given(size=st.integers(1, 10), k=st.integers(0, 12),
+       seed=st.integers(0, 10_000))
+def test_stacked_top_k_returns_best_in_order(size, k, seed):
+    rng = np.random.default_rng(seed)
+    encs = [random_encoding(rng, 2, 6, 4) for _ in range(size)]
+    pop = StackedPopulation.from_encodings(encs)
+    scores = rng.random(size)
+    top = pop.top_k(scores, k)
+    order = np.argsort(scores)[: min(k, size)]
+    assert len(top) == min(k, size)
+    for j, i in enumerate(order):
+        assert np.array_equal(top.layer_to_chip[j], pop.layer_to_chip[i])

@@ -1,16 +1,19 @@
-"""GA mapping engine: operator validity + convergence."""
+"""GA mapping engine: operator validity + convergence + warm-start
+re-seeding (the cross-group co-search elite carrier)."""
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.encoding import random_encoding
+from repro.core.encoding import MappingEncoding, as_stacked, random_encoding
 from repro.core.evaluator import CostTables, evaluate
 from repro.core.ga import (
     GAConfig,
     crossover,
     ga_search,
+    joint_ga_search,
     mutate,
     random_search,
     simulated_annealing_search,
+    validate_warm_start,
 )
 from repro.core.hardware import make_hardware
 from repro.core.workload import LLMSpec, build_execution_graph, prefill_request
@@ -68,3 +71,126 @@ def test_sa_search_runs():
     res = simulated_annealing_search(fn, g.rows, g.n_cols, HW.n_chiplets,
                                      iters=30)
     assert res.best_score <= res.history[0]
+
+
+# --- warm-start elite carry (co-search rounds) -------------------------------
+
+
+def _chip0_affinity_fns():
+    """Two fitness landscapes that invert each other: ``favour`` rewards
+    chip-0 assignments, ``penalise`` punishes them — the stand-in for a
+    best-known latency vector that changed between co-search rounds."""
+
+    def favour(pop):
+        lc = as_stacked(pop).layer_to_chip
+        return (lc != 0).reshape(lc.shape[0], -1).sum(axis=1).astype(float)
+
+    def penalise(pop):
+        lc = as_stacked(pop).layer_to_chip
+        return (lc == 0).reshape(lc.shape[0], -1).sum(axis=1).astype(float)
+
+    favour.accepts_stacked = True
+    penalise.accepts_stacked = True
+    return favour, penalise
+
+
+def test_warm_start_elites_rescored_against_new_fitness():
+    """Stale-elite contamination guard: elites carried from a previous
+    round were ranked against that round's best-known latency vector;
+    when the vector changes, their old scores are meaningless. ga_search
+    must re-score the warm population under the CURRENT fitness — a
+    carried elite must never win on its stale score."""
+    rows, m_cols, chips = 2, 6, 4
+    favour, penalise = _chip0_affinity_fns()
+    res_a = ga_search(favour, rows, m_cols, chips,
+                      GAConfig(population=12, generations=10, seed=0))
+    assert res_a.best_score <= 2  # strongly chip-0 under the old fitness
+    warm = res_a.final_population.top_k(res_a.final_scores, 4)
+
+    first_scores = []
+
+    def spy(pop):
+        s = penalise(pop)
+        if not first_scores:
+            first_scores.append((as_stacked(pop).layer_to_chip.copy(), s))
+        return s
+
+    spy.accepts_stacked = True
+    res_b = ga_search(spy, rows, m_cols, chips,
+                      GAConfig(population=12, generations=4, seed=1),
+                      warm_start=warm)
+    init_lc, init_s = first_scores[0]
+    # the warm elites are IN the initial population...
+    elite_idx = [i for i in range(len(init_lc))
+                 if np.array_equal(init_lc[i], warm.layer_to_chip[0])]
+    assert elite_idx
+    # ...and carry their FRESH (bad) score under the new fitness — under
+    # the old one they scored <= 2; a stale-score implementation would
+    # still rank them at that value and crown a chip-0 mapping
+    assert init_s[elite_idx[0]] >= m_cols * rows - 2
+    assert res_b.history[0] == float(init_s.min())
+    # best_score is reproducible by fresh evaluation (no stale leak-through)
+    assert res_b.best_score == float(penalise([res_b.best])[0])
+    assert float(penalise([res_a.best])[0]) > res_b.best_score
+
+
+def test_validate_warm_start_drops_invalid_encodings():
+    rng = np.random.default_rng(0)
+    good = random_encoding(rng, 2, 6, 4)
+    wrong_shape = random_encoding(rng, 3, 6, 4)
+    out_of_bounds = random_encoding(rng, 2, 6, 4)
+    out_of_bounds.layer_to_chip[0, 0] = 99
+    kept = validate_warm_start([good, wrong_shape, out_of_bounds], 2, 6, 4)
+    assert len(kept) == 1
+    assert np.array_equal(kept[0].layer_to_chip, good.layer_to_chip)
+    # survivors are copies: mutating them cannot alias the carrier
+    kept[0].layer_to_chip[0, 0] = 1
+    assert kept[0].layer_to_chip[0, 0] != good.layer_to_chip[0, 0] \
+        or good.layer_to_chip[0, 0] == 1
+
+
+def test_ga_search_with_all_invalid_warm_start_still_runs():
+    fn, g = _eval_fn()
+    bad = [MappingEncoding(np.zeros(g.n_cols - 1, np.uint8),
+                           np.full((g.rows, g.n_cols), 10_000, np.int32))]
+    res = ga_search(fn, g.rows, g.n_cols, HW.n_chiplets,
+                    GAConfig(population=8, generations=2, seed=0),
+                    warm_start=bad)
+    assert res.best.validate(HW.n_chiplets)
+
+
+def test_warm_start_none_is_bit_identical_to_cold_start():
+    fn, g = _eval_fn()
+    cfg = GAConfig(population=10, generations=4, seed=7)
+    a = ga_search(fn, g.rows, g.n_cols, HW.n_chiplets, cfg)
+    b = ga_search(fn, g.rows, g.n_cols, HW.n_chiplets, cfg, warm_start=None)
+    assert a.best_score == b.best_score
+    assert np.array_equal(a.best.layer_to_chip, b.best.layer_to_chip)
+
+
+def test_joint_ga_single_group_matches_ga_search():
+    """The joint GA's rng draw sequence collapses to ``ga_search``'s when
+    one structure group exists — the engine-level half of the joint ==
+    spliced property (tests/test_coexplore.py holds the compass level)."""
+    fn, g = _eval_fn()
+    cfg = GAConfig(population=10, generations=5, seed=3)
+
+    def stacked_fn(pop):
+        return fn(pop.to_encodings() if not isinstance(pop, list) else pop)
+
+    stacked_fn.accepts_stacked = True
+    solo = ga_search(stacked_fn, g.rows, g.n_cols, HW.n_chiplets, cfg)
+
+    key = (g.rows, g.n_cols)
+
+    def joint_fn(pops):
+        return stacked_fn(pops[key])
+
+    joint = joint_ga_search(joint_fn, {key: key}, HW.n_chiplets, cfg)
+    assert joint.best_score == solo.best_score
+    assert np.array_equal(joint.best[key].layer_to_chip,
+                          solo.best.layer_to_chip)
+    assert np.array_equal(joint.best[key].segmentation,
+                          solo.best.segmentation)
+    assert joint.evaluations == solo.evaluations
+    assert joint.history == solo.history

@@ -1,0 +1,157 @@
+"""Golden regression suite: seeded end-to-end search scores pinned
+against checked-in goldens.
+
+Every case is fully deterministic (fixed seeds, fixed streams, dense CPU
+timing backend), so a future evaluator/GA/co-search refactor that shifts
+any number — EDP, goodput, BO best score — fails here instead of sliding
+silently. Structural facts (GA evaluation counts, group counts,
+convergence) are pinned exactly; float scores carry a small relative
+tolerance for cross-platform jit reduction-order drift.
+
+Regenerate after an INTENDED change with::
+
+    REPRO_REGEN_GOLDENS=1 PYTHONPATH=src python -m pytest -q \
+        tests/test_golden_search.py
+
+and commit the updated ``tests/goldens/search_goldens.json`` alongside an
+explanation of why the numbers moved.
+"""
+import json
+import math
+import os
+
+import pytest
+
+from repro.core.compass import CoSearchConfig, Scenario, explore, search_mapping
+from repro.core.ga import GAConfig
+from repro.core.hardware import make_hardware
+from repro.core.objectives import GoodputUnderSLO
+from repro.core.streams import RequestStream
+from repro.core.traces import TraceDistribution
+from repro.core.workload import LLMSpec, prefill_request
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
+                           "search_goldens.json")
+REGEN = bool(os.environ.get("REPRO_REGEN_GOLDENS"))
+RTOL = 1e-3
+
+SPEC = LLMSpec("tiny", 512, 8, 8, 64, 2048, 32000, 8)
+SMALL = TraceDistribution("small", mean_input=48, mean_output=12, max_len=256)
+HW = make_hardware(64, "M", tensor_parallel=2)
+CFG = GAConfig(population=8, generations=4, seed=0)
+
+
+def _case_edp_fixed_batches():
+    """Scenario 1: deterministic fixed prefill batches, EDP objective."""
+    batches = [
+        [prefill_request(64), prefill_request(128)],
+        [prefill_request(96), prefill_request(192)],
+    ]
+    out = search_mapping(SPEC, batches, HW, [2, 2], CFG, objective="edp",
+                         n_blocks=1)
+    return {
+        "score": out.score,
+        "latency_s": out.latency_s,
+        "energy_j": out.energy_j,
+        "n_groups": len(out.encodings),
+        "ga_evaluations": out.ga_evaluations,
+    }
+
+
+def _goodput_scenario():
+    st = RequestStream("golden", trace=SMALL, rate=16.0, n_requests=32,
+                       warm_fraction=0.6, max_new_tokens_cap=6, seed=3)
+    return Scenario("golden", SPEC, target_tops=64, stream=st,
+                    scheduler="orca", n_blocks=1, max_stream_iters=32)
+
+
+def _case_goodput_stream():
+    """Scenario 2: mixed prefill+decode orca stream, goodput objective —
+    one-sweep AND fixed-point co-search scores pinned together."""
+    sc = _goodput_scenario()
+    ro = sc.rollout()
+    mbs = [sc.micro_batch(HW, b) for b in ro.batches]
+    obj = GoodputUnderSLO(ttft_slo_s=0.5, tpot_slo_s=0.1)
+    one = search_mapping(SPEC, ro.batches, HW, mbs, CFG, objective=obj,
+                         n_blocks=1, stream_rollout=ro)
+    fp = search_mapping(SPEC, ro.batches, HW, mbs, CFG, objective=obj,
+                        n_blocks=1, stream_rollout=ro,
+                        co_search=CoSearchConfig(mode="fixed_point",
+                                                 max_rounds=4))
+    return {
+        "one_sweep_score": one.score,
+        "fixed_point_score": fp.score,
+        "fixed_point_rounds": fp.rounds,
+        "fixed_point_converged": fp.converged,
+        "n_groups": len(one.encodings),
+        "n_batches": len(ro.batches),
+    }
+
+
+def _case_explore_fixed():
+    """Scenario 1 through the full BO x GA loop (EDP x MC)."""
+    batches = [
+        [prefill_request(64), prefill_request(128)],
+        [prefill_request(96), prefill_request(192)],
+    ]
+    sc = Scenario("golden-explore", SPEC, target_tops=64,
+                  stream=RequestStream.fixed_batches(batches), n_blocks=1)
+    res = explore(sc, bo_iters=2, bo_init=2, ga_config=CFG, seed=0)
+    return {
+        "bo_best_score": res.bo.best_score,
+        "edp": res.mapping.edp,
+        "n_chiplets": res.hardware.n_chiplets,
+    }
+
+
+CASES = {
+    "search_edp_fixed_batches": _case_edp_fixed_batches,
+    "search_goodput_stream": _case_goodput_stream,
+    "explore_edp_mc_fixed": _case_explore_fixed,
+}
+
+
+def _load_goldens() -> dict:
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def _check(name: str, got: dict, golden: dict):
+    assert set(got) == set(golden["values"]), (
+        f"golden case {name!r} keys drifted: {sorted(got)} vs "
+        f"{sorted(golden['values'])}")
+    rtol = golden.get("rtol", RTOL)
+    for key, want in golden["values"].items():
+        have = got[key]
+        if isinstance(want, bool) or isinstance(have, bool):
+            assert have == want, f"{name}.{key}: {have!r} != {want!r}"
+        elif isinstance(want, (int, float)):
+            assert math.isfinite(have), f"{name}.{key} is {have}"
+            if isinstance(want, int) and isinstance(have, int):
+                assert have == want, f"{name}.{key}: {have} != {want}"
+            else:
+                assert have == pytest.approx(want, rel=rtol), (
+                    f"{name}.{key}: {have!r} != golden {want!r} "
+                    f"(rtol={rtol}) — if intended, regenerate with "
+                    "REPRO_REGEN_GOLDENS=1")
+        else:
+            assert have == want
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden(name):
+    got = CASES[name]()
+    if REGEN:
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        data = {}
+        if os.path.exists(GOLDEN_PATH):
+            data = _load_goldens()
+        data[name] = {"rtol": RTOL, "values": got}
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        pytest.skip(f"regenerated golden {name!r}")
+    goldens = _load_goldens()
+    assert name in goldens, (
+        f"no golden for {name!r}; run REPRO_REGEN_GOLDENS=1 once")
+    _check(name, got, goldens[name])

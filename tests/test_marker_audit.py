@@ -1,0 +1,81 @@
+"""Tier-1 fast-path marker audit (COMPASS_FULL=0).
+
+Tier-1 — the repo verify command and the CI fast path — must finish under
+a wall-clock budget. Two mechanisms enforce it:
+
+* ``pytest.ini`` registers the ``slow`` marker and deselects it by
+  default, so paper-scale / end-to-end cases only run in the scheduled
+  slow CI job (``pytest -m slow``);
+* ``conftest.py`` audits per-test wall-clock against
+  ``REPRO_TEST_BUDGET_S`` and fails the session in CI
+  (``REPRO_ENFORCE_TEST_BUDGET=1``) when an unmarked test exceeds it.
+
+This module pins the wiring itself, so neither half can silently rot.
+"""
+import ast
+import configparser
+import os
+
+import conftest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TESTS = os.path.dirname(os.path.abspath(__file__))
+
+# the known paper-scale end-to-end cases that must never run in tier-1
+EXPECTED_SLOW = {
+    "test_fixed_point_explore_end_to_end",
+    "test_goodput_frontier_end_to_end",
+}
+
+
+def _slow_marked_tests() -> set:
+    """All test functions decorated with ``pytest.mark.slow`` (AST scan —
+    no collection plugins, works under -m deselection)."""
+    found = set()
+    for fname in os.listdir(TESTS):
+        if not (fname.startswith("test_") and fname.endswith(".py")):
+            continue
+        with open(os.path.join(TESTS, fname)) as f:
+            tree = ast.parse(f.read(), filename=fname)
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                text = ast.unparse(dec)
+                if "mark.slow" in text:
+                    found.add(node.name)
+    return found
+
+
+def test_slow_marker_registered_and_deselected_by_default():
+    cfg = configparser.ConfigParser()
+    cfg.read(os.path.join(ROOT, "pytest.ini"))
+    markers = cfg.get("pytest", "markers")
+    assert "slow" in markers.split()[0], markers
+    addopts = cfg.get("pytest", "addopts")
+    assert "not slow" in addopts, (
+        "tier-1 must deselect slow tests by default (pytest.ini addopts)")
+
+
+def test_known_end_to_end_cases_are_marked_slow():
+    marked = _slow_marked_tests()
+    missing = EXPECTED_SLOW - marked
+    assert not missing, (
+        f"end-to-end cases {sorted(missing)} must carry @pytest.mark.slow "
+        "(they exceed the tier-1 wall-clock budget)")
+
+
+def test_wall_clock_budget_hook_is_wired():
+    # the conftest audit is live in this very session
+    assert hasattr(conftest, "_budget_offenders")
+    assert conftest._BUDGET_S > 0
+    # and the enforcement knob is env-driven, not hardcoded off
+    assert "REPRO_ENFORCE_TEST_BUDGET" in open(
+        os.path.join(TESTS, "conftest.py")).read()
+
+
+def test_ci_runs_enforced_fast_path_and_scheduled_slow_job():
+    ci = open(os.path.join(ROOT, ".github", "workflows", "ci.yml")).read()
+    assert "REPRO_ENFORCE_TEST_BUDGET" in ci
+    assert "-m slow" in ci
+    assert "schedule" in ci
