@@ -21,6 +21,7 @@ the ``GAConfig`` defaults in ``repro.core.ga``.
 """
 import argparse
 import json
+import os
 import time
 
 from .common import FULL
@@ -444,6 +445,17 @@ def run(out_path: str | None = None, population: int | None = None,
     }
     if sweep:
         rec["pop_gen_sweep"] = bench_pop_gen_sweep()
+    elif out_path and os.path.exists(out_path):
+        # keep sections this invocation did not recompute (the expensive
+        # --sweep record survives a default regeneration)
+        try:
+            with open(out_path) as f:
+                prev = json.load(f)
+            for key in ("pop_gen_sweep",):
+                if key in prev and key not in rec:
+                    rec[key] = prev[key]
+        except (OSError, ValueError):
+            pass
     text = json.dumps(rec, indent=2)
     print(text)
     if out_path:

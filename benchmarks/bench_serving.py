@@ -3,8 +3,15 @@ strategies on a GovReport-style long-context scenario, the
 homogeneous-vs-heterogeneous comparison (Fig. 10b), and the multi-rate
 goodput frontier — per-scheduler arrival-rate sweeps with the three
 cross-group co-search modes (one_sweep / fixed_point / joint) as
-comparable frontier lines, recorded in BENCH_serving.json together with
-each curve's saturation knee."""
+comparable frontier lines. The rate grid is no longer fixed: each curve
+is adaptively refined around its saturation knee
+(``repro.core.frontier.refine_knee`` — boundary peaks extend the grid,
+interior knees are bisection-bracketed within half the coarse spacing)
+and every ``with_rate`` point prices the SAME request population
+(rate-invariant streams), so the knees in BENCH_serving.json compare
+goodput on identical requests. The mixed-scenario acceptance record also
+pins the cross-mode warm start: a joint search seeded from the completed
+fixed-point run must match-or-beat the cold joint."""
 import json
 import time
 
@@ -14,6 +21,7 @@ from .common import (
     bo_budget,
     cosearch_modes,
     emit,
+    frontier_budget,
     ga_config,
     mixed_cosearch_scenario,
 )
@@ -26,22 +34,27 @@ def goodput_frontier():
     rollout on true per-request timings, so rising load exposes the
     saturation knee (the rate of peak goodput) instead of a monotone
     latency proxy; fixed-point and joint lines are directly comparable to
-    the one-sweep baseline because they share scenario, seed and GA
-    budget."""
+    the one-sweep baseline because they share scenario, seed, GA budget
+    AND (rate-invariance) the exact request population. Each curve's knee
+    is adaptively refined: ties break to the highest rate, a peak on the
+    grid boundary extends the grid (or is flagged ``knee_saturated``
+    when the probe budget runs out), and interior knees are bracketed
+    within ``rel_tol`` of the knee rate."""
     import numpy as np
     from repro.configs import all_archs
     from repro.core.bo import random_point
     from repro.core.compass import Scenario, hardware_objective
+    from repro.core.frontier import refine_knee
     from repro.core.objectives import GoodputUnderSLO
     from repro.core.streams import RequestStream
     from repro.core.traces import SHAREGPT
 
     spec = all_archs()["llama3.2-3b"].llm_spec()
     point = random_point(np.random.default_rng(0), 512)
-    rates = (0.25, 0.5, 1.0, 2.0, 4.0) if FULL else (0.5, 1.0, 2.0)
+    fb = frontier_budget()
     schedulers = ("vllm", "orca", "chunked_prefill") if FULL \
         else ("orca", "chunked_prefill")
-    n_req = 16 if FULL else 8
+    n_req = fb["n_requests"]
     obj = GoodputUnderSLO(ttft_slo_s=0.5, tpot_slo_s=0.1)
     base = RequestStream("sharegpt-load", trace=SHAREGPT, rate=1.0,
                          n_requests=n_req, warm_fraction=0.25,
@@ -49,8 +62,8 @@ def goodput_frontier():
     lines = []
     for sched in schedulers:
         for mode_name, cs in cosearch_modes().items():
-            curve = []
-            for rate in rates:
+
+            def evaluate(rate, sched=sched, mode_name=mode_name, cs=cs):
                 sc = Scenario(f"load-{sched}-{mode_name}-{rate:g}", spec,
                               target_tops=512, stream=base.with_rate(rate),
                               scheduler=sched, objective=obj, n_blocks=2,
@@ -58,38 +71,60 @@ def goodput_frontier():
                 with Timer() as t:
                     score, out = hardware_objective(sc, point, ga_config())
                 goodput = -score        # requests/s meeting both SLOs
-                curve.append({
-                    "rate": rate,
-                    "goodput_req_per_s": round(goodput, 4),
-                    "rounds": out.rounds,
-                    "converged": out.converged,
-                    "ga_evaluations": out.ga_evaluations,
-                    "wall_s": round(t.us / 1e6, 2),
-                })
-                print(f"# {sched:16s} {mode_name:11s} rate={rate:5.2f} "
+                print(f"# {sched:16s} {mode_name:11s} rate={rate:7.3f} "
                       f"goodput={goodput:9.3f} req/s rounds={out.rounds} "
                       f"conv={out.converged}")
                 emit(f"frontier_{sched}_{mode_name}_{rate:g}", t.us,
                      f"goodput={goodput:.4f}")
-            knee = max(curve, key=lambda r: r["goodput_req_per_s"])
+                return goodput, {
+                    "rounds": out.rounds,
+                    "converged": out.converged,
+                    "ga_evaluations": out.ga_evaluations,
+                    "wall_s": round(t.us / 1e6, 2),
+                }
+
+            res = refine_knee(evaluate, fb["coarse_rates"],
+                              rel_tol=fb["rel_tol"],
+                              max_probes=fb["max_probes"],
+                              extend_factor=fb["extend_factor"])
+            curve = [{"rate": p.rate,
+                      "goodput_req_per_s": round(p.goodput, 4),
+                      **p.meta} for p in res.points]
+            lo, hi = res.bracket
             lines.append({
                 "scheduler": sched,
                 "mode": mode_name,
                 "curve": curve,
-                "knee_rate": knee["rate"],
-                "peak_goodput_req_per_s": knee["goodput_req_per_s"],
+                "knee_rate": res.knee_rate,
+                "peak_goodput_req_per_s": round(res.peak_goodput, 4),
+                "knee_saturated": res.knee_saturated,
+                "knee_bracket": [lo, hi],
+                "knee_converged": res.converged,
+                "refine_probes": res.probes,
             })
-    # per (scheduler, rate), the fixed point must dominate the one sweep
+            emit(f"frontier_knee_{sched}_{mode_name}", 0,
+                 f"knee={res.knee_rate:g} saturated={res.knee_saturated}")
+    # per (scheduler, shared rate), the fixed point must dominate the one
+    # sweep — adaptive refinement probes different rates per mode, so the
+    # comparison runs on the rates both curves priced (the coarse grid at
+    # minimum)
     by_key = {(ln["scheduler"], ln["mode"]): ln for ln in lines}
-    dominated = all(
-        fp_pt["goodput_req_per_s"] >= os_pt["goodput_req_per_s"] - 1e-9
-        for sched in schedulers
-        for fp_pt, os_pt in zip(by_key[(sched, "fixed_point")]["curve"],
-                                by_key[(sched, "one_sweep")]["curve"]))
+
+    def _by_rate(line):
+        return {pt["rate"]: pt["goodput_req_per_s"] for pt in line["curve"]}
+
+    dominated = True
+    for sched in schedulers:
+        fp = _by_rate(by_key[(sched, "fixed_point")])
+        os_ = _by_rate(by_key[(sched, "one_sweep")])
+        for rate in sorted(set(fp) & set(os_)):
+            dominated &= fp[rate] >= os_[rate] - 1e-9
     emit("frontier_fixed_point_dominates_one_sweep", 0, f"ok={dominated}")
     return {
         "objective": obj.name,
-        "rates": list(rates),
+        "coarse_rates": list(fb["coarse_rates"]),
+        "rel_tol": fb["rel_tol"],
+        "max_probes": fb["max_probes"],
         "n_requests": n_req,
         "lines": lines,
         "fixed_point_dominates_one_sweep": dominated,
@@ -100,20 +135,27 @@ def fixed_point_vs_one_sweep():
     """Acceptance record: on the mixed prefill+decode stream scenario
     (>= 2 structure groups, so the cross-group coupling is real) the
     fixed-point co-search must converge and reach goodput >= the one-sweep
-    baseline (joint is recorded alongside for comparison)."""
-    from repro.core.compass import search_mapping
+    baseline, and a joint search warm-started from the completed
+    fixed-point run (cross-mode warm start) must match-or-beat the cold
+    joint."""
+    from repro.core.compass import CoSearchConfig, search_mapping
 
     spec, hw, ro, mbs, obj = mixed_cosearch_scenario(
         n_blocks=2, max_stream_iters=96, ga_cfg=ga_config())
     rec = {"scenario": "sharegpt mixed prefill+decode (orca)",
            "objective": obj.name,
            "n_batches": len(ro.batches)}
-    # let the acceptance run iterate to the actual fixed point
-    for mode_name, cs in cosearch_modes(max_rounds_fp=8).items():
+    outs = {}
+    # let the acceptance run iterate to the actual fixed point; then seed
+    # a joint population from its adopted per-group elites
+    modes = dict(cosearch_modes(max_rounds_fp=8))
+
+    def run(mode_name, cs):
         with Timer() as t:
             out = search_mapping(spec, ro.batches, hw, mbs, ga_config(),
                                  objective=obj, n_blocks=2,
                                  stream_rollout=ro, co_search=cs)
+        outs[mode_name] = out
         rec[mode_name] = {
             "goodput_req_per_s": round(-out.score, 4),
             "rounds": out.rounds,
@@ -126,12 +168,24 @@ def fixed_point_vs_one_sweep():
               f"rounds={out.rounds} conv={out.converged} "
               f"groups={len(out.encodings)}")
         emit(f"mix_cosearch_{mode_name}", t.us, f"goodput={-out.score:.4f}")
+
+    for mode_name, cs in modes.items():
+        run(mode_name, cs)
+    run("joint_warm", CoSearchConfig(mode="joint",
+                                     warm_from=outs["fixed_point"],
+                                     warm_fraction=0.5))
     ratio = rec["fixed_point"]["goodput_req_per_s"] \
         / max(rec["one_sweep"]["goodput_req_per_s"], 1e-30)
     rec["fixed_point_over_one_sweep"] = round(ratio, 4)
     ok = rec["fixed_point"]["converged"] and ratio >= 1.0 - 1e-9
     rec["acceptance_converged_and_no_worse"] = ok
     emit("mix_cosearch_acceptance", 0, f"ok={ok}")
+    warm_ratio = rec["joint_warm"]["goodput_req_per_s"] \
+        / max(rec["joint"]["goodput_req_per_s"], 1e-30)
+    rec["warm_joint_over_cold_joint"] = round(warm_ratio, 4)
+    warm_ok = warm_ratio >= 1.0 - 1e-9
+    rec["acceptance_warm_joint_no_worse_than_cold"] = warm_ok
+    emit("mix_cosearch_warm_joint_acceptance", 0, f"ok={warm_ok}")
     return rec
 
 

@@ -22,6 +22,26 @@ def bo_budget():
     return (100, 10) if FULL else (4, 4)  # (iters, init)
 
 
+def frontier_budget():
+    """Adaptive goodput-frontier budgets (benchmarks/bench_serving.py):
+    the coarse rate grid, the per-curve refinement-probe budget, and the
+    knee bracket tolerance. ``rel_tol=0.5`` means the knee is bracketed
+    within half its rate — i.e. at most HALF the factor-2 coarse grid
+    spacing around it (the acceptance bar). COMPASS_FULL raises the
+    request count so the saturation knee is actually reachable (8
+    requests saturate long before paper-scale load) and widens the grid
+    so the knee is interior, not a boundary artefact."""
+    if FULL:
+        return dict(coarse_rates=(0.25, 0.5, 1.0, 2.0, 4.0, 8.0),
+                    n_requests=64, max_probes=8, rel_tol=0.5,
+                    extend_factor=2.0)
+    # the smoke knee sits ~2 extensions beyond the coarse grid, so the
+    # probe budget covers extension + bracketing (probes at high rates
+    # are cheap: the stream saturates in few iterations)
+    return dict(coarse_rates=(0.5, 1.0, 2.0), n_requests=8, max_probes=6,
+                rel_tol=0.5, extend_factor=2.0)
+
+
 def cosearch_modes(max_rounds_fp: int | None = None):
     """The three comparable co-search configurations (one_sweep /
     fixed_point / joint) shared by the serving frontier and the

@@ -31,7 +31,12 @@ import numpy as np
 
 from ..serving.scheduler import Scheduler, get_scheduler
 from .bo import BOResult, HardwarePoint, bo_search
-from .encoding import MappingEncoding, as_stacked, pipeline_parallel
+from .encoding import (
+    MappingEncoding,
+    StackedPopulation,
+    as_stacked,
+    pipeline_parallel,
+)
 from .evaluator import EvalResult, evaluate
 from .ga import GAConfig, GAResult, ga_search, joint_ga_search
 from .hardware import HardwareConfig, monetary_cost
@@ -72,7 +77,12 @@ class CoSearchConfig:
       sequence is non-increasing.
     * ``joint`` — one GA population spans all groups (one encoding per
       group per individual, ``ga.joint_ga_search``); fitness needs no
-      best-known splicing at all.
+      best-known splicing at all. ``warm_from`` seeds part of the joint
+      population from a completed run's adopted per-group elites
+      (cross-mode warm start — typically a ``fixed_point``
+      ``MappingSearchOutput``), and ``violation_bias`` steers the
+      per-group mutation mask toward the group whose latencies dominate
+      the current SLO violations (see ``ga.joint_ga_search``).
 
     Objectives without stream coupling (EDP / latency / energy) make the
     groups independent, so non-``one_sweep`` modes fall back with a
@@ -84,11 +94,28 @@ class CoSearchConfig:
     max_evals: int | None = None  # total GA evaluations across rounds
     warm_start: bool = True      # carry elites into later rounds
     warm_elites: int = 8         # how many elites re-seed each group's GA
+    # joint-mode cross-mode warm start: a completed MappingSearchOutput
+    # (or {group key -> encoding list}) whose adopted per-group elites
+    # seed up to warm_fraction of the joint population (validated via
+    # ga.validate_warm_start; 0.0 is bit-identical to a cold start)
+    warm_from: object = None
+    warm_fraction: float = 0.5
+    # joint-mode mutation bias toward the SLO-violating group: 0 = uniform
+    # group draw, 1 = pure violation attribution (mixed, so every group
+    # keeps a mutation floor)
+    violation_bias: float = 0.5
 
     def __post_init__(self):
         if self.mode not in CO_SEARCH_MODES:
             raise ValueError(f"unknown co-search mode {self.mode!r}; "
                              f"choose from {CO_SEARCH_MODES}")
+        if not 0.0 <= self.warm_fraction <= 1.0:
+            raise ValueError(
+                f"warm_fraction must be in [0, 1], got {self.warm_fraction}")
+        if not 0.0 <= self.violation_bias <= 1.0:
+            raise ValueError(
+                f"violation_bias must be in [0, 1], "
+                f"got {self.violation_bias}")
 
 
 def get_co_search(spec: "CoSearchConfig | str | None") -> CoSearchConfig:
@@ -224,6 +251,10 @@ class MappingSearchOutput:
     round_scores: list[float] = field(default_factory=list)
     converged: bool = True            # fixed point reached (no group improved)
     ga_evaluations: int = 0           # total GA evaluations across rounds
+    # adopted encoding + final-round elites per group: the cross-mode warm
+    # start carrier (CoSearchConfig(mode="joint", warm_from=this_output))
+    group_elites: "dict[tuple, list[MappingEncoding]]" = field(
+        default_factory=dict)
 
     @property
     def edp(self) -> float:
@@ -394,7 +425,7 @@ class _SearchContext:
 
 def _finalise(ctx: _SearchContext, encodings, ga_results, per_batch, *,
               mode: str, rounds: int, round_scores, converged: bool,
-              ga_evaluations: int) -> MappingSearchOutput:
+              ga_evaluations: int, group_elites=None) -> MappingSearchOutput:
     lat = float(sum(r.latency_s for r in per_batch))
     en = float(sum(r.energy_j for r in per_batch))
     mc = monetary_cost(ctx.hw)["mc_total"]
@@ -408,7 +439,39 @@ def _finalise(ctx: _SearchContext, encodings, ga_results, per_batch, *,
         ga_results=ga_results, per_batch=per_batch,
         mode=mode, rounds=rounds, round_scores=list(round_scores),
         converged=converged, ga_evaluations=ga_evaluations,
+        group_elites=dict(group_elites or {}),
     )
+
+
+def _same_encoding(a: MappingEncoding, b: MappingEncoding) -> bool:
+    return np.array_equal(a.segmentation, b.segmentation) \
+        and np.array_equal(a.layer_to_chip, b.layer_to_chip)
+
+
+def _warm_group_encodings(source, key) -> "list[MappingEncoding]":
+    """Per-group warm-start candidates from a cross-mode warm source: a
+    completed :class:`MappingSearchOutput` (adopted encoding + final-round
+    elites) or a raw ``{group key -> encodings}`` dict. Unknown groups
+    yield ``[]`` — ``joint_ga_search`` then disables the warm start
+    entirely (every group must contribute a seed to every warm slot).
+
+    Note on coherence: only warm individual 0 — the tuple of ADOPTED
+    encodings — is a co-evaluated whole-scenario mapping. Later slots
+    pair each group's independently-ranked elites by list position;
+    they are strong per-group seeds, not jointly-scored solutions."""
+    if isinstance(source, MappingSearchOutput):
+        encs = list(source.group_elites.get(key, []))
+        if not encs and key in source.encodings:
+            encs = [source.encodings[key]]
+        return encs
+    if isinstance(source, dict):
+        v = source.get(key, [])
+        if isinstance(v, StackedPopulation):
+            return v.to_encodings()
+        return list(v)
+    raise ValueError(
+        "co-search warm_from must be a MappingSearchOutput or a "
+        f"{{group key -> encodings}} dict, got {type(source).__name__}")
 
 
 def _search_rounds(ctx: _SearchContext) -> MappingSearchOutput:
@@ -487,27 +550,56 @@ def _search_rounds(ctx: _SearchContext) -> MappingSearchOutput:
             converged = True
             break
 
+    # cross-mode warm-start carrier: the adopted encoding first, then the
+    # final searched round's elites for each group (validated + re-scored
+    # by any consumer via ga.validate_warm_start)
+    group_elites: dict[tuple, list[MappingEncoding]] = {}
+    for key in groups:
+        adopted = encodings.get(key)
+        es = [adopted.copy()] if adopted is not None else []
+        carried = warm.get(key)
+        if carried is not None:
+            es.extend(e.copy() for e in carried.to_encodings()
+                      if adopted is None or not _same_encoding(e, adopted))
+        group_elites[key] = es
+
     return _finalise(
         ctx, encodings, ga_results, per_batch,
         mode=cs.mode, rounds=rounds_done,
         round_scores=round_scores, converged=converged,
-        ga_evaluations=evals)
+        ga_evaluations=evals, group_elites=group_elites)
 
 
 def _search_joint(ctx: _SearchContext) -> MappingSearchOutput:
     """Joint co-search: one GA population spans every structure group —
     each individual is a whole-scenario mapping, scored on its own full
-    latency vector (no best-known splicing)."""
+    latency vector (no best-known splicing). ``cs.warm_from`` seeds up to
+    ``cs.warm_fraction`` of the population from a completed run's adopted
+    per-group elites (cross-mode warm start), and the per-group mutation
+    mask is biased by the SLO violation attribution of each generation's
+    best candidate (``cs.violation_bias``)."""
     from .jax_evaluator import JointStreamEvaluator
 
+    cs = ctx.cs
     jse = JointStreamEvaluator(ctx.group_evals, ctx.groups,
-                               ctx.stream_rollout, ctx.obj)
+                               ctx.stream_rollout, ctx.obj,
+                               track_bias=cs.violation_bias > 0)
+    warm = None
+    if cs.warm_from is not None and cs.warm_fraction > 0:
+        cap = int(round(cs.warm_fraction * ctx.ga_config.population))
+        if cap > 0:
+            warm = {key: _warm_group_encodings(cs.warm_from, key)[:cap]
+                    for key in ctx.groups}
     res = joint_ga_search(jse.scores, {k: k for k in ctx.groups},
-                          ctx.hw.n_chiplets, ctx.ga_config)
+                          ctx.hw.n_chiplets, ctx.ga_config,
+                          warm_start=warm,
+                          mutation_bias=jse.group_bias,
+                          violation_bias=cs.violation_bias)
 
     encodings: dict[tuple, MappingEncoding] = {}
     ga_results: list[GAResult] = []
     per_batch: list[EvalResult | None] = [None] * len(ctx.graphs)
+    group_elites: dict[tuple, list[MappingEncoding]] = {}
     for gi, (key, idxs) in enumerate(ctx.groups.items()):
         enc = res.best[key]
         encodings[key] = enc
@@ -518,12 +610,21 @@ def _search_joint(ctx: _SearchContext) -> MappingSearchOutput:
         ga_results.append(GAResult(
             best=enc, best_score=res.best_score, history=res.history,
             evaluations=res.evaluations if gi == 0 else 0))
+        es = [enc.copy()]
+        if res.final_populations is not None:
+            top = res.final_populations[key].top_k(res.final_scores,
+                                                   cs.warm_elites)
+            # the joint best IS the top elite — skip the exact duplicate
+            # so every seeded warm slot is a distinct individual
+            es.extend(e.copy() for e in top.to_encodings()
+                      if not _same_encoding(e, enc))
+        group_elites[key] = es
     final = ctx.rollout_score(
         np.asarray([r.latency_s for r in per_batch]))
     return _finalise(
         ctx, encodings, ga_results, per_batch,
         mode="joint", rounds=1, round_scores=[final], converged=True,
-        ga_evaluations=res.evaluations)
+        ga_evaluations=res.evaluations, group_elites=group_elites)
 
 
 def _make_population_eval(graphs, tables, hw, use_jax: bool | None,

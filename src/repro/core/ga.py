@@ -425,11 +425,34 @@ def ga_search(
                     final_scores=np.asarray(scores, dtype=float))
 
 
+def _group_bias_probs(mutation_bias, n_groups: int,
+                      violation_bias: float) -> "np.ndarray | None":
+    """Resolve the per-group mutation-choice distribution: the violation
+    attribution (from ``mutation_bias()``) mixed with uniform by
+    ``violation_bias`` — full bias would starve non-violating groups of
+    mutation attention entirely, so the uniform floor keeps every group
+    explored. Returns ``None`` (uniform draw) when no usable signal."""
+    if mutation_bias is None or violation_bias <= 0.0 or n_groups < 2:
+        return None
+    w = mutation_bias() if callable(mutation_bias) else mutation_bias
+    if w is None:
+        return None
+    w = np.asarray(w, dtype=float)
+    if w.shape != (n_groups,) or not np.all(np.isfinite(w)) \
+            or np.any(w < 0) or w.sum() <= 0:
+        return None
+    w = w / w.sum()
+    return (1.0 - violation_bias) / n_groups + violation_bias * w
+
+
 def joint_ga_search(
     eval_fn: Callable,
     shapes: "dict[tuple, tuple[int, int]]",
     n_chips: int,
     config: GAConfig | None = None,
+    warm_start: "dict[tuple, Sequence[MappingEncoding]] | None" = None,
+    mutation_bias: "Callable | np.ndarray | None" = None,
+    violation_bias: float = 0.0,
 ) -> JointGAResult:
     """One GA population spanning every structure group of a scenario
     (joint cross-group co-search). Individual ``i`` is the tuple of group
@@ -438,9 +461,27 @@ def joint_ga_search(
 
     Selection and crossover act on *shared* parent indices and a shared
     crossover mask, so a child's cross-group genotype stays coupled; each
-    mutated individual mutates in exactly one uniformly-drawn group (the
-    per-group mutation mask of ``mutate_population``), keeping per-step
-    mutation strength comparable to the per-group GA.
+    mutated individual mutates in exactly one drawn group (the per-group
+    mutation mask of ``mutate_population``), keeping per-step mutation
+    strength comparable to the per-group GA. The group draw is uniform
+    unless ``mutation_bias`` (an (n_groups,) weight vector or a nullary
+    callable returning one — e.g.
+    ``jax_evaluator.JointStreamEvaluator.group_bias``, the per-group SLO
+    violation attribution of the current best candidate) is given:
+    weights are then mixed with uniform as ``(1 - violation_bias)/G +
+    violation_bias * w``, steering mutation attention toward the group
+    whose latencies dominate the current violations.
+
+    ``warm_start`` (group key -> index-aligned encoding lists, e.g. a
+    completed fixed-point run's adopted per-group elites) seeds the front
+    of every group's initial population: each list is filtered by
+    :func:`validate_warm_start` and truncated to the *common* count so
+    every warm slot is seeded in every group. Warm individual 0 (the
+    adopted-encoding tuple of a fixed-point source) is a co-evaluated
+    whole-scenario mapping; later slots pair per-group elites by list
+    position — strong per-group seeds, not jointly-scored solutions.
+    With an empty/absent warm start the rng draw sequence is
+    bit-identical to the cold search (tested in tests/test_coexplore.py).
 
     ``eval_fn`` receives the dict of index-aligned ``StackedPopulation``
     and returns (P,) minimised scores — no best-known splicing is
@@ -451,11 +492,20 @@ def joint_ga_search(
     rng = np.random.default_rng(cfg.seed)
     keys = list(shapes)
     n_groups = len(keys)
+    n_warm = 0
+    warm: dict = {}
+    if warm_start is not None:
+        warm = {k: validate_warm_start(list(warm_start.get(k, [])),
+                                       *shapes[k], n_chips) for k in keys}
+        n_warm = min((len(warm[k]) for k in keys), default=0)
+        n_warm = min(n_warm, cfg.population)
     pops = {}
     for k in keys:
         rows, m_cols = shapes[k]
-        pops[k] = StackedPopulation.from_encodings(
-            seed_population(rng, rows, m_cols, n_chips, cfg.population))
+        init = warm[k][:n_warm] if n_warm else []
+        init += seed_population(rng, rows, m_cols, n_chips,
+                                cfg.population - n_warm)
+        pops[k] = StackedPopulation.from_encodings(init)
     scores = np.asarray(eval_fn(pops), dtype=float)
     n_eval = cfg.population
     history = [float(scores.min())]
@@ -490,7 +540,9 @@ def joint_ga_search(
                               rate=cfg.mutation_rate)
         else:
             do = rng.random(n_child) < cfg.mutation_rate
-            grp = rng.integers(n_groups, size=n_child)
+            p = _group_bias_probs(mutation_bias, n_groups, violation_bias)
+            grp = rng.choice(n_groups, size=n_child, p=p) if p is not None \
+                else rng.integers(n_groups, size=n_child)
             for gi, k in enumerate(keys):
                 mutate_population(rng, children[k], n_chips, progress,
                                   mask=do & (grp == gi))

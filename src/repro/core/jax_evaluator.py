@@ -39,6 +39,7 @@ on the same scenario.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
 from typing import Sequence
@@ -60,6 +61,7 @@ from .timing import (
     PallasTimingBackend,
     TimingBackend,
     TimingMatrix,
+    attribute_group_violations,
     dense_pass_b,
     fold_request_timings,
     padded_predecessor_columns,
@@ -340,10 +342,11 @@ def _table_arrays(t: CostTables) -> dict:
 # keyed cache pins them on device across GA generations, across
 # search_mapping calls on the same scenario, and across evaluator
 # instances. Keys are object ids; the cache holds the tables themselves so
-# a live entry's ids can never be recycled.
+# a live entry's ids can never be recycled. Eviction is LRU (hits refresh
+# recency) — FIFO would evict the scenario's own hot buffers mid-sweep.
 # --------------------------------------------------------------------------
 
-_DEVICE_TABLE_CACHE: dict = {}
+_DEVICE_TABLE_CACHE: "OrderedDict" = OrderedDict()
 _DEVICE_CACHE_CAPACITY = 64
 _DEVICE_CACHE_STATS = {"hits": 0, "misses": 0}
 
@@ -353,10 +356,11 @@ def _stacked_device_tables(tables: "tuple[CostTables, ...]") -> dict:
     hit = _DEVICE_TABLE_CACHE.get(key)
     if hit is not None:
         _DEVICE_CACHE_STATS["hits"] += 1
+        _DEVICE_TABLE_CACHE.move_to_end(key)
         return hit[1]
     _DEVICE_CACHE_STATS["misses"] += 1
     if len(_DEVICE_TABLE_CACHE) >= _DEVICE_CACHE_CAPACITY:
-        _DEVICE_TABLE_CACHE.pop(next(iter(_DEVICE_TABLE_CACHE)))  # FIFO
+        _DEVICE_TABLE_CACHE.popitem(last=False)                   # LRU
     per_batch = [_table_arrays(t) for t in tables]
     if len(tables) == 1:
         stacked = {k: jnp.asarray(per_batch[0][k]) for k in per_batch[0]}
@@ -515,6 +519,14 @@ class JointStreamEvaluator:
     per-request timings in one jitted ``timing.fold_request_timings``
     call, scored by the SLO objective.
 
+    Each ``scores`` call also refreshes the per-group *violation
+    attribution* of the generation's best candidate
+    (``timing.attribute_group_violations`` over the objective's
+    ``violations`` mask): :meth:`group_bias` exposes it so
+    ``ga.joint_ga_search`` can bias its per-group mutation mask toward
+    the group whose spliced latencies dominate the current SLO
+    violations.
+
     ``group_evals`` maps group key -> ``eval(pop) -> ((B, P) latency_s,
     (B, P) energy_j)`` — a ``GroupPopulationEvaluator.evaluate_population``
     or the numpy-oracle fallback, so joint mode works on every timing
@@ -524,6 +536,13 @@ class JointStreamEvaluator:
     groups: "dict[tuple, list[int]]"
     rollout: object
     objective: object
+    # set False when the consumer will never read group_bias (e.g.
+    # CoSearchConfig(violation_bias=0)): skips the per-generation
+    # violation-mask + attribution work entirely
+    track_bias: bool = True
+
+    def __post_init__(self):
+        self._last_bias: "np.ndarray | None" = None
 
     @property
     def n_batches(self) -> int:
@@ -543,7 +562,30 @@ class JointStreamEvaluator:
 
     def scores(self, pops: "dict[tuple, object]") -> np.ndarray:
         """(P,) minimised SLO scores of the joint population."""
-        timings = fold_request_timings(self.rollout,
-                                       self.latency_matrix(pops))
-        return np.asarray(self.objective.score_timings(timings),
-                          dtype=float)
+        from .streams import RequestTimings
+
+        full = self.latency_matrix(pops)
+        timings = fold_request_timings(self.rollout, full)
+        s = np.asarray(self.objective.score_timings(timings), dtype=float)
+        violations = getattr(self.objective, "violations", None)
+        if self.track_bias and violations is not None and s.size:
+            # attribution only needs the best candidate: slice its row out
+            # BEFORE computing the violation mask, so percentile/SLO work
+            # is 1/P of the population-wide computation per generation
+            best = int(np.argmin(s))
+            bt = RequestTimings(
+                ttft_s=timings.ttft_s[best], tpot_s=timings.tpot_s[best],
+                finished=timings.finished[best], warm=timings.warm,
+                makespan_s=float(np.asarray(timings.makespan_s)[best]),
+                synthetic=timings.synthetic)
+            viol = np.asarray(violations(bt), dtype=bool)
+            self._last_bias = attribute_group_violations(
+                self.rollout, full[best], viol,
+                list(self.groups.values()))
+        return s
+
+    def group_bias(self) -> "np.ndarray | None":
+        """Per-group violation weights of the latest generation's best
+        candidate ((G,) in ``groups`` order, summing to 1), or ``None``
+        before the first ``scores`` call / for non-SLO objectives."""
+        return self._last_bias

@@ -148,6 +148,14 @@ class _StreamObjective(Objective):
     def score_timings(self, timings: RequestTimings) -> np.ndarray:
         raise NotImplementedError
 
+    def violations(self, timings: RequestTimings) -> np.ndarray:
+        """(..., R) bool mask of requests violating the objective — the
+        input of per-group violation attribution
+        (``timing.attribute_group_violations``), which biases the joint
+        co-search's mutation toward the structure group whose latencies
+        dominate the violations. Default: unfinished requests."""
+        return ~np.asarray(timings.finished, dtype=bool)
+
     def score(self, latency_s, energy_j, mc=1.0, timings=None):
         return float(self.score_timings(self._timings(timings)))
 
@@ -169,6 +177,11 @@ class TTFTPercentile(_StreamObjective):
         # instead of poisoning the estimate with nan
         return np.percentile(ttft, self.pct, axis=-1, method="higher")
 
+    def violations(self, timings):
+        # cold requests at/above the percentile drive the score
+        s = np.asarray(self.score_timings(timings))[..., None]
+        return (~timings.warm) & (timings.ttft_s >= s)
+
 
 class TPOTPercentile(_StreamObjective):
     """p-th percentile time-per-output-token over all requests (seconds);
@@ -182,6 +195,10 @@ class TPOTPercentile(_StreamObjective):
         return np.percentile(timings.tpot_s, self.pct, axis=-1,
                              method="higher")
 
+    def violations(self, timings):
+        s = np.asarray(self.score_timings(timings))[..., None]
+        return timings.tpot_s >= s
+
 
 class GoodputUnderSLO(_StreamObjective):
     """Negated goodput: -(requests finished within both SLOs) / makespan.
@@ -192,13 +209,18 @@ class GoodputUnderSLO(_StreamObjective):
         self.tpot_slo_s = float(tpot_slo_s)
         self.name = f"goodput@ttft{ttft_slo_s:g}s/tpot{tpot_slo_s:g}s"
 
+    def _ok(self, t):
+        ttft_ok = t.warm | (t.ttft_s <= self.ttft_slo_s)
+        return t.finished & ttft_ok & (t.tpot_s <= self.tpot_slo_s)
+
     def score_timings(self, timings):
         t = timings
-        ttft_ok = t.warm | (t.ttft_s <= self.ttft_slo_s)
-        ok = t.finished & ttft_ok & (t.tpot_s <= self.tpot_slo_s)
         mk = np.asarray(t.makespan_s, dtype=float)
-        good = ok.sum(axis=-1)
+        good = self._ok(t).sum(axis=-1)
         return -np.where(mk > 0.0, good / np.maximum(mk, 1e-300), 0.0)
+
+    def violations(self, timings):
+        return ~self._ok(timings)
 
 
 _NAMED = {

@@ -95,14 +95,29 @@ class RequestStream:
 
     def with_rate(self, rate: float) -> "RequestStream":
         """The same stream at a different offered load — the unit step of
-        an arrival-rate sweep (multi-rate goodput frontiers). Only
-        distribution-mode streams have an arrival process to re-rate."""
+        an arrival-rate sweep (multi-rate goodput frontiers). The request
+        *population* (lengths, warm mix, decode contexts) is bit-identical
+        across rates — only the arrival iterations change — so frontier
+        points compare goodput on the same requests (regression-tested in
+        tests/test_streams.py). Only distribution-mode streams have an
+        arrival process to re-rate."""
         if self.is_fixed or self.requests is not None:
             raise ValueError(
                 f"stream {self.name!r} has no arrival process (fixed "
                 "batches or an explicit request list); with_rate needs a "
                 "distribution-mode stream")
         return replace(self, rate=float(rate))
+
+    def _field_rngs(self, seed: int | None):
+        """Independent per-field child generators (lengths / arrival gaps /
+        warm mask / decode contexts), spawned from one SeedSequence. A
+        single shared generator would let the arrival draws perturb the
+        subsequent warm-mask and context draws, so two ``with_rate``
+        points (or a poisson-vs-deterministic pair) would sample
+        *different request populations* — the frontier confound this
+        split removes by construction."""
+        ss = np.random.SeedSequence(self.seed if seed is None else seed)
+        return tuple(np.random.default_rng(c) for c in ss.spawn(4))
 
     def sample(self, seed: int | None = None) -> list[StreamRequest]:
         """Materialise the request list (deterministic for a fixed seed)."""
@@ -116,14 +131,18 @@ class RequestStream:
         if self.arrival not in ARRIVALS:
             raise ValueError(f"unknown arrival process {self.arrival!r}; "
                              f"choose from {ARRIVALS}")
-        rng = np.random.default_rng(self.seed if seed is None else seed)
-        lens = self.trace.sample(rng, self.n_requests)
+        len_rng, gap_rng, warm_rng, ctx_rng = self._field_rngs(seed)
+        lens = self.trace.sample(len_rng, self.n_requests)
         if self.arrival == "poisson":
-            gaps = rng.exponential(1.0 / self.rate, size=self.n_requests)
+            gaps = gap_rng.exponential(1.0 / self.rate,
+                                       size=self.n_requests)
             arrivals = np.floor(np.cumsum(gaps) - gaps[0]).astype(int)
         else:
             arrivals = (np.arange(self.n_requests) / self.rate).astype(int)
-        warm = rng.random(self.n_requests) < self.warm_fraction
+        warm = warm_rng.random(self.n_requests) < self.warm_fraction
+        # contexts are drawn for EVERY request (warm or not) so the decode
+        # snapshot of request i is invariant to the warm mask as well
+        ctx_u = ctx_rng.random(self.n_requests)
         out = []
         for i, (ilen, olen) in enumerate(lens):
             new = int(olen) if self.max_new_tokens_cap is None \
@@ -131,7 +150,7 @@ class RequestStream:
             new = max(new, 1)
             if warm[i]:
                 # decode-resident snapshot: context = input + progress*output
-                ctx = int(ilen + rng.random() * olen) + 1
+                ctx = int(ilen + ctx_u[i] * olen) + 1
                 out.append(StreamRequest(ilen, new, int(arrivals[i]),
                                          warm_context=ctx))
             else:

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import os
 import warnings
+from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
@@ -54,6 +55,7 @@ __all__ = [
     "TIMING_BACKENDS", "get_timing_backend", "resolve_timing_backend",
     "padded_predecessor_columns", "padded_predecessor_positions",
     "dense_pass_b", "fold_request_timings", "splice_latencies",
+    "attribute_group_violations",
     "get_execution_graph", "get_cost_tables", "get_graph_and_tables",
     "cost_cache_stats", "clear_cost_caches",
 ]
@@ -335,7 +337,7 @@ def splice_latencies(base_lat, idxs, cand_lat) -> np.ndarray:
     return full
 
 
-_FOLD_CACHE: dict[int, object] = {}
+_FOLD_CACHE: dict[str, object] = {}   # single "fn" slot, like _DENSE_CACHE
 
 
 def _fold_fn():
@@ -391,6 +393,49 @@ def fold_request_timings(rollout, batch_latency_s):
         synthetic=rollout.synthetic)
 
 
+def attribute_group_violations(rollout, batch_latency_s, violating,
+                               group_idxs) -> np.ndarray:
+    """Per-group violation attribution from the timing matrix: how much of
+    the SLO-violating requests' latency is owed to each structure group.
+
+    For every violating request, its *latency window* runs from the first
+    executed iteration at/after arrival to its completion iteration (or
+    the end of the horizon when unfinished); each batch inside the window
+    contributes its own latency. Summing those contributions per batch and
+    then per owning structure group yields the group weights the joint
+    co-search uses to bias its per-group mutation mask toward the group
+    whose spliced latencies dominate the current violations.
+
+    ``batch_latency_s`` (B,): the reference candidate's per-iteration
+    latencies; ``violating`` (R,) bool (an objective's ``violations``
+    mask); ``group_idxs``: ordered list of per-group batch-index lists.
+    Returns (G,) non-negative weights summing to 1 — uniform when nothing
+    violates (no signal: keep exploring every group)."""
+    lat = np.asarray(batch_latency_s, dtype=float)
+    assert lat.ndim == 1, "attribution needs ONE candidate's latencies"
+    nb = lat.shape[0]
+    viol = np.asarray(violating, dtype=bool)
+    n_groups = len(group_idxs)
+    uniform = np.full(n_groups, 1.0 / max(n_groups, 1))
+    if n_groups == 0 or not viol.any():
+        return uniform
+    start = np.minimum(np.asarray(rollout.arrival_b), nb - 1)[viol]
+    done = np.asarray(rollout.done_b)[viol]
+    end = np.where(done >= 0, done, nb - 1)
+    # interval-cover counting: +1 at start, -1 past end, prefix-sum ->
+    # how many violating windows cover each batch
+    delta = np.zeros(nb + 1, dtype=float)
+    np.add.at(delta, start, 1.0)
+    np.add.at(delta, end + 1, -1.0)
+    cover = np.cumsum(delta[:-1])
+    per_batch = cover * lat
+    weights = np.array([per_batch[list(idxs)].sum() for idxs in group_idxs])
+    total = weights.sum()
+    if not np.isfinite(total) or total <= 0.0:
+        return uniform
+    return weights / total
+
+
 # --------------------------------------------------------------------------
 # Persistent cost-table / execution-graph cache
 # --------------------------------------------------------------------------
@@ -400,10 +445,15 @@ def fold_request_timings(rollout, batch_latency_s):
 # generation, every search_mapping call on the scenario, and every BO point
 # sharing a chiplet spec. The device-resident stacked copies are cached one
 # level up, in jax_evaluator, keyed on the host tables cached here.
+#
+# Eviction is LRU (hits refresh recency): under FIFO, a hardware sweep
+# over more than _CACHE_CAPACITY points evicted the very entry it was
+# about to reuse — the scenario's graphs/tables are the HOTTEST entries
+# but also the OLDEST, so every sweep iteration rebuilt them (thrash).
 
 
-_GRAPH_CACHE: dict = {}
-_TABLE_CACHE: dict = {}
+_GRAPH_CACHE: "OrderedDict" = OrderedDict()
+_TABLE_CACHE: "OrderedDict" = OrderedDict()
 _CACHE_CAPACITY = 256
 _STATS = {"graph_hits": 0, "graph_misses": 0,
           "table_hits": 0, "table_misses": 0}
@@ -422,12 +472,13 @@ def get_execution_graph(spec, batch, micro_batch, tp, n_blocks=None):
     if g is None:
         _STATS["graph_misses"] += 1
         if len(_GRAPH_CACHE) >= _CACHE_CAPACITY:
-            _GRAPH_CACHE.pop(next(iter(_GRAPH_CACHE)))   # FIFO eviction
+            _GRAPH_CACHE.popitem(last=False)             # LRU eviction
         g = build_execution_graph(spec, list(batch), micro_batch, tp=tp,
                                   n_blocks=n_blocks)
         _GRAPH_CACHE[key] = g
     else:
         _STATS["graph_hits"] += 1
+        _GRAPH_CACHE.move_to_end(key)                    # refresh hot entry
     return g
 
 
@@ -441,11 +492,12 @@ def get_cost_tables(graph, graph_key, hw):
     if t is None:
         _STATS["table_misses"] += 1
         if len(_TABLE_CACHE) >= _CACHE_CAPACITY:
-            _TABLE_CACHE.pop(next(iter(_TABLE_CACHE)))   # FIFO eviction
+            _TABLE_CACHE.popitem(last=False)             # LRU eviction
         t = CostTables.build(graph, hw)
         _TABLE_CACHE[key] = t
     else:
         _STATS["table_hits"] += 1
+        _TABLE_CACHE.move_to_end(key)                    # refresh hot entry
     return t
 
 

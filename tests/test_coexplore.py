@@ -125,6 +125,146 @@ def test_joint_multi_group_runs(multi_group):
     assert jt.ga_evaluations == CFG.population * (CFG.generations + 1)
 
 
+def test_warm_fraction_zero_is_bit_identical_to_cold_joint(multi_group):
+    """Cross-mode warm start OFF-switch: warm_fraction=0 must not perturb
+    the joint search at all — same rng draw sequence, same encodings."""
+    sc, _ = multi_group
+    fp = _searched(sc, CoSearchConfig(mode="fixed_point", max_rounds=3))
+    cold = _searched(sc, "joint")
+    warm0 = _searched(sc, CoSearchConfig(mode="joint", warm_from=fp,
+                                         warm_fraction=0.0))
+    assert warm0.score == cold.score
+    assert warm0.latency_s == cold.latency_s
+    _same_encodings(warm0.encodings, cold.encodings)
+
+
+def test_fixed_point_warm_started_joint_beats_or_matches_cold(multi_group):
+    """Cross-mode warm start on the mixed prefill+decode golden scenario.
+
+    warm <= fp holds BY CONSTRUCTION: the adopted fixed-point solution
+    enters the initial population as one whole individual and elitism
+    never loses the best. warm <= cold is the PR's pinned acceptance bar
+    on this fixed-seed scenario — an empirical regression, not a theorem
+    (the cold run draws a different random population, so a GA-trajectory
+    change elsewhere can legitimately move it; if that happens, re-verify
+    the warm start still helps and re-pin)."""
+    sc, _ = multi_group
+    fp = _searched(sc, CoSearchConfig(mode="fixed_point", max_rounds=5))
+    # the carrier records adopted encoding + final-round elites per group
+    assert set(fp.group_elites) == set(fp.encodings)
+    assert all(len(v) >= 1 for v in fp.group_elites.values())
+    cold = _searched(sc, "joint")
+    warm = _searched(sc, CoSearchConfig(mode="joint", warm_from=fp,
+                                        warm_fraction=0.5))
+    assert warm.mode == "joint"
+    assert warm.score <= cold.score + 1e-9      # goodput >= cold joint
+    assert warm.score <= fp.score + 1e-9        # and >= its warm source
+
+
+def test_warm_from_rejects_bad_source_and_fractions(multi_group):
+    sc, _ = multi_group
+    with pytest.raises(ValueError, match="warm_fraction"):
+        CoSearchConfig(mode="joint", warm_fraction=1.5)
+    with pytest.raises(ValueError, match="violation_bias"):
+        CoSearchConfig(mode="joint", violation_bias=-0.1)
+    with pytest.raises(ValueError, match="warm_from"):
+        _searched(sc, CoSearchConfig(mode="joint", warm_from=42,
+                                     warm_fraction=0.5))
+
+
+def test_warm_from_missing_group_disables_warm_start(multi_group):
+    """A warm source that cannot seed EVERY group aligned is ignored:
+    partially-seeded joint individuals would not be coherent cross-group
+    genotypes (ga.joint_ga_search truncates to the common count, 0)."""
+    sc, _ = multi_group
+    cold = _searched(sc, "joint")
+    some_key = next(iter(cold.encodings))
+    partial = {some_key: [cold.encodings[some_key]]}   # one group only
+    warm = _searched(sc, CoSearchConfig(mode="joint", warm_from=partial,
+                                        warm_fraction=0.5))
+    assert warm.score == cold.score
+    _same_encodings(warm.encodings, cold.encodings)
+
+
+def test_violation_attribution_biases_toward_dominant_group():
+    """Unit contract of timing.attribute_group_violations: weights follow
+    the violating requests' latency windows, sum to 1, and fall back to
+    uniform when nothing violates."""
+    from repro.core.streams import RequestStream, StreamRequest, rollout
+    from repro.core.timing import attribute_group_violations
+    from repro.serving.scheduler import get_scheduler
+
+    reqs = [StreamRequest(16, 2), StreamRequest(16, 2, arrival_iter=1)]
+    ro = rollout(RequestStream.from_requests(reqs), get_scheduler("orca"))
+    nb = len(ro.batches)
+    assert nb >= 2
+    groups = [[0], list(range(1, nb))]
+    lat = np.ones(nb)
+    # no violations -> uniform
+    none = attribute_group_violations(ro, lat, np.zeros(2, bool), groups)
+    assert np.allclose(none, [0.5, 0.5])
+    # all violating -> mass proportional to latency inside the windows;
+    # the tail group owns nb-1 of the nb unit-latency batches
+    allv = attribute_group_violations(ro, lat, np.ones(2, bool), groups)
+    assert np.isclose(allv.sum(), 1.0)
+    assert allv[1] > allv[0]
+    # making group 0's batch 10x slower shifts the attribution to it
+    slow0 = lat.copy()
+    slow0[0] = 10.0 * (nb - 1)
+    shifted = attribute_group_violations(ro, slow0, np.ones(2, bool),
+                                         groups)
+    assert shifted[0] > allv[0]
+
+
+def test_joint_group_bias_tracks_best_candidate(multi_group):
+    """JointStreamEvaluator.group_bias is refreshed by every scores()
+    call: a (G,) distribution over the scenario's structure groups."""
+    from repro.core.encoding import StackedPopulation
+    from repro.core.ga import seed_population
+    from repro.core.jax_evaluator import JointStreamEvaluator
+    from repro.core.timing import get_graph_and_tables
+
+    sc, one = multi_group
+    ro = sc.rollout()
+    groups, graphs, tables = {}, [], []
+    for i, b in enumerate(ro.batches):
+        g, t = get_graph_and_tables(SPEC, b, HW, sc.micro_batch(HW, b), 1)
+        graphs.append(g)
+        tables.append(t)
+        groups.setdefault((g.rows, g.n_cols), []).append(i)
+
+    from repro.core.evaluator import evaluate
+
+    def make_eval(key):
+        idxs = groups[key]
+
+        def ev(pop):
+            encs = pop.to_encodings() if isinstance(pop, StackedPopulation) \
+                else list(pop)
+            lat = np.zeros((len(idxs), len(encs)))
+            en = np.zeros_like(lat)
+            for bi, i in enumerate(idxs):
+                for pi, e in enumerate(encs):
+                    r = evaluate(graphs[i], e, HW, tables[i])
+                    lat[bi, pi] = r.latency_s
+                    en[bi, pi] = r.energy_j
+            return lat, en
+        return ev
+
+    jse = JointStreamEvaluator({k: make_eval(k) for k in groups}, groups,
+                               ro, OBJ)
+    assert jse.group_bias() is None
+    rng = np.random.default_rng(0)
+    pops = {k: StackedPopulation.from_encodings(
+        seed_population(rng, k[0], k[1], HW.n_chiplets, 4))
+        for k in groups}
+    s = jse.scores(pops)
+    assert s.shape == (4,)
+    bias = jse.group_bias()
+    assert bias is not None and bias.shape == (len(groups),)
+    assert np.isclose(bias.sum(), 1.0) and np.all(bias >= 0)
+
+
 def test_non_stream_objective_falls_back_to_one_sweep(multi_group):
     sc, _ = multi_group
     ro = sc.rollout()
@@ -185,6 +325,42 @@ def test_fixed_point_explore_end_to_end():
     res = explore(sc, bo_iters=1, bo_init=2, ga_config=CFG, seed=0)
     assert res.mapping.mode == "fixed_point"
     assert np.isfinite(res.bo.best_score)
+
+
+@pytest.mark.slow
+def test_adaptive_frontier_end_to_end():
+    """COMPASS_FULL=0 adaptive-frontier smoke (scheduled slow job): the
+    refinement loop drives real co-search evaluations through
+    hardware_objective, terminates under its probe budget, and — because
+    with_rate is population-invariant — every probe priced the same
+    requests."""
+    from repro.core.bo import random_point
+    from repro.core.frontier import refine_knee
+
+    pt = random_point(np.random.default_rng(0), 64)
+    base = RequestStream("front-adapt", trace=SMALL, rate=1.0,
+                         n_requests=12, warm_fraction=0.4,
+                         max_new_tokens_cap=4, seed=2)
+
+    def evaluate(rate):
+        sc = Scenario(f"front-adapt-{rate:g}", SPEC, target_tops=64,
+                      stream=base.with_rate(rate), scheduler="orca",
+                      objective=OBJ, n_blocks=1, max_stream_iters=32,
+                      co_search=CoSearchConfig(mode="fixed_point",
+                                               max_rounds=2))
+        score, out = hardware_objective(sc, pt, CFG)
+        return -score, {"rounds": out.rounds}
+
+    res = refine_knee(evaluate, (0.5, 1.0, 2.0), rel_tol=0.5, max_probes=4)
+    assert res.probes <= 4
+    rates = [p.rate for p in res.points]
+    assert rates == sorted(rates)
+    assert all("rounds" in p.meta for p in res.points)
+    # a saturated knee is only reported when the budget genuinely ran out
+    if res.knee_saturated:
+        assert res.probes == 4
+    else:
+        assert res.bracket[0] <= res.knee_rate <= res.bracket[1]
 
 
 @pytest.mark.slow

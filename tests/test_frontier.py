@@ -1,0 +1,183 @@
+"""Adaptive goodput-frontier refinement (repro.core.frontier).
+
+Pins the contract of the knee search:
+
+* knee ties on a goodput plateau break toward the HIGHEST rate (the old
+  ``max(curve, key=goodput)`` under-reported the knee);
+* a peak on the high grid boundary extends the grid instead of being
+  reported as the knee, and only an exhausted budget leaves the curve
+  flagged ``knee_saturated``;
+* an interior knee is bracketed within ``rel_tol`` by bisection;
+* the refinement loop terminates within ``max_probes`` extra
+  evaluations for ANY evaluator (property test).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.frontier import FrontierPoint, knee_index, refine_knee
+
+
+def _unimodal(knee: float, width: float = 1.0):
+    """A smooth goodput curve peaking at ``knee``."""
+
+    def evaluate(rate):
+        return float(np.exp(-((np.log(rate / knee) / width) ** 2))), {}
+
+    return evaluate
+
+
+def test_knee_index_prefers_highest_tied_rate():
+    pts = [FrontierPoint(0.5, 1.0), FrontierPoint(1.0, 3.0),
+           FrontierPoint(2.0, 3.0), FrontierPoint(4.0, 2.0)]
+    assert knee_index(pts) == 2      # plateau: highest tied rate wins
+    # near-ties within the relative tolerance count as a plateau too
+    pts[2].goodput = 3.0 * (1 - 1e-12)
+    assert knee_index(pts) == 2
+    with pytest.raises(ValueError):
+        knee_index([])
+
+
+def test_interior_knee_brackets_within_tolerance():
+    res = refine_knee(_unimodal(1.3), [0.25, 0.5, 1.0, 2.0, 4.0],
+                      rel_tol=0.25, max_probes=16)
+    assert not res.knee_saturated
+    assert res.converged
+    lo, hi = res.bracket
+    assert lo <= 1.3 <= hi or abs(res.knee_rate - 1.3) <= 0.35
+    assert hi - lo <= 0.25 * res.knee_rate
+    # the curve is memoised and sorted by rate
+    rates = [p.rate for p in res.points]
+    assert rates == sorted(rates) and len(rates) == len(set(rates))
+
+
+def test_refinement_halves_coarse_bracket():
+    """The acceptance bar: refinement shrinks a non-saturated knee's
+    bracket to at most HALF the coarse grid bracket around it (each
+    bisection probe halves the wider flank)."""
+    coarse = [0.5, 1.0, 2.0, 4.0]
+    res = refine_knee(_unimodal(1.9), coarse, rel_tol=1e-6, max_probes=2)
+    lo, hi = res.bracket
+    # the knee's coarse bracket was (1.0, 4.0) around rate 2.0
+    assert not res.knee_saturated
+    assert hi - lo <= (4.0 - 1.0) / 2 + 1e-12
+
+
+def test_boundary_peak_extends_grid_instead_of_reporting_knee():
+    def tent(r):
+        return (float(r if r <= 8.0 else 16.0 - r), {})
+
+    # monotone rising on the grid: the fixed sweep would report rate=2
+    res = refine_knee(tent, [0.5, 1.0, 2.0], rel_tol=0.25, max_probes=8)
+    assert res.knee_rate == pytest.approx(8.0)   # the grid was extended
+    assert not res.knee_saturated    # the knee became interior
+    # with no budget to extend, the boundary point is FLAGGED, not trusted
+    res0 = refine_knee(tent, [0.5, 1.0, 2.0], rel_tol=0.25, max_probes=0)
+    assert res0.knee_saturated
+    assert res0.knee_rate == 2.0
+    # a plateau that never falls stays saturated however far we extend
+    sat = refine_knee(lambda r: (min(r, 10.0), {}), [0.5, 1.0, 2.0],
+                      rel_tol=0.25, max_probes=6)
+    assert sat.knee_saturated
+
+
+def test_low_boundary_peak_extends_down_instead_of_converging():
+    """A peak on the LOW grid edge is as untrustworthy as one on the
+    high edge: the true knee may lie below the sweep. The loop must
+    extend the grid downward, and if the budget dies with the peak still
+    on the low boundary the curve is flagged saturated — never reported
+    as a converged knee."""
+    # true knee at 0.2, below the coarse grid: 1/r-style falling curve
+    res = refine_knee(lambda r: (1.0 / r if r >= 0.2 else r, {}),
+                      [0.5, 1.0, 2.0], rel_tol=0.25, max_probes=8,
+                      extend_factor=2.0)
+    assert any(p.rate < 0.5 for p in res.points)   # grid extended down
+    assert res.knee_rate < 0.5
+    # monotone falling for r >= 0.2: the knee keeps sitting on the low
+    # boundary until the grid crosses 0.2; whatever the budget reached,
+    # a boundary peak must never be reported as converged
+    if res.knee_saturated:
+        assert not res.converged
+    else:
+        assert res.bracket[0] < res.knee_rate < res.bracket[1]
+    # no budget at all: the low-boundary peak is flagged, not trusted
+    res0 = refine_knee(lambda r: (1.0 / r, {}), [0.5, 1.0, 2.0],
+                       rel_tol=0.25, max_probes=0)
+    assert res0.knee_saturated
+    assert not res0.converged
+
+
+def test_all_zero_grid_searches_below_not_above():
+    """A grid entirely past the saturation cliff (goodput 0 everywhere)
+    must extend DOWN — rising load cannot create goodput, and each
+    wasted probe is a full co-search in the serving benchmark."""
+    def cliff(r):
+        return (0.25 - r if r < 0.25 else 0.0, {})
+
+    res = refine_knee(cliff, [0.5, 1.0, 2.0], rel_tol=0.25, max_probes=6,
+                      extend_factor=2.0)
+    assert all(p.rate <= 2.0 for p in res.points)   # never extended up
+    assert any(p.rate < 0.25 for p in res.points)   # found the live region
+    assert res.peak_goodput > 0.0
+
+
+def test_max_rate_caps_extension_and_stays_saturated():
+    res = refine_knee(lambda r: (r, {}), [1.0, 2.0], rel_tol=0.25,
+                      max_probes=50, extend_factor=2.0, max_rate=16.0)
+    assert res.knee_saturated
+    assert res.knee_rate <= 16.0
+    assert res.probes < 50           # the ceiling stopped the loop early
+
+
+def test_input_validation():
+    with pytest.raises(ValueError):
+        refine_knee(lambda r: (r, {}), [])
+    with pytest.raises(ValueError):
+        refine_knee(lambda r: (r, {}), [0.0, 1.0])
+
+
+def test_evaluator_called_once_per_rate():
+    calls = []
+
+    def evaluate(rate):
+        calls.append(rate)
+        return _unimodal(1.0)(rate)
+
+    res = refine_knee(evaluate, [0.5, 1.0, 2.0, 1.0, 0.5], rel_tol=0.1,
+                      max_probes=6)
+    assert len(calls) == len(set(calls))
+    assert len(res.points) == len(calls)
+    assert res.probes <= 6
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_coarse=st.integers(1, 5),
+       max_probes=st.integers(0, 10),
+       rel_tol=st.floats(0.01, 1.0),
+       extend=st.floats(1.1, 4.0))
+def test_refinement_terminates_under_probe_budget(seed, n_coarse,
+                                                  max_probes, rel_tol,
+                                                  extend):
+    """Property: for ANY evaluator — including noisy, non-unimodal, even
+    adversarially plateaued curves — refine_knee terminates after at most
+    ``max_probes`` refinement evaluations beyond the coarse grid."""
+    rng = np.random.default_rng(seed)
+    coarse = sorted(set(np.round(rng.uniform(0.1, 8.0, n_coarse), 3)))
+
+    calls = []
+
+    def evaluate(rate):
+        calls.append(rate)
+        # arbitrary deterministic curve incl. exact plateaus
+        return float(np.round(np.sin(rate * 12.9898) * 43758.5453 % 3.0,
+                              1)), {}
+
+    res = refine_knee(evaluate, coarse, rel_tol=rel_tol,
+                      max_probes=max_probes, extend_factor=extend)
+    assert len(calls) <= len(coarse) + max_probes
+    assert res.probes <= max_probes
+    assert res.points[-1].rate >= res.points[0].rate
+    # the reported knee is one of the priced points
+    assert any(p.rate == res.knee_rate for p in res.points)

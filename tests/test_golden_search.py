@@ -67,7 +67,12 @@ def _goodput_scenario():
 
 def _case_goodput_stream():
     """Scenario 2: mixed prefill+decode orca stream, goodput objective —
-    one-sweep AND fixed-point co-search scores pinned together."""
+    one-sweep, fixed-point, cold joint AND fixed-point-warm-started joint
+    co-search scores pinned together. warm <= fp is guaranteed (the
+    adopted fixed-point solution seeds the population and elitism never
+    loses the best); warm <= cold joint is the pinned acceptance bar for
+    THIS seeded scenario, not a theorem — regenerate deliberately if a GA
+    change moves the cold trajectory."""
     sc = _goodput_scenario()
     ro = sc.rollout()
     mbs = [sc.micro_batch(HW, b) for b in ro.batches]
@@ -78,11 +83,22 @@ def _case_goodput_stream():
                         n_blocks=1, stream_rollout=ro,
                         co_search=CoSearchConfig(mode="fixed_point",
                                                  max_rounds=4))
+    joint = search_mapping(SPEC, ro.batches, HW, mbs, CFG, objective=obj,
+                           n_blocks=1, stream_rollout=ro, co_search="joint")
+    warm = search_mapping(SPEC, ro.batches, HW, mbs, CFG, objective=obj,
+                          n_blocks=1, stream_rollout=ro,
+                          co_search=CoSearchConfig(mode="joint",
+                                                   warm_from=fp,
+                                                   warm_fraction=0.5))
+    assert warm.score <= joint.score + 1e-9
+    assert warm.score <= fp.score + 1e-9
     return {
         "one_sweep_score": one.score,
         "fixed_point_score": fp.score,
         "fixed_point_rounds": fp.rounds,
         "fixed_point_converged": fp.converged,
+        "joint_score": joint.score,
+        "joint_warm_score": warm.score,
         "n_groups": len(one.encodings),
         "n_batches": len(ro.batches),
     }

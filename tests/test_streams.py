@@ -121,6 +121,43 @@ def test_deterministic_arrivals():
     assert [r.arrival_iter for r in st.sample()] == [0, 2, 4, 6]
 
 
+def _population(reqs):
+    """The rate-independent identity of a sampled request list."""
+    return [(r.prompt_len, r.max_new_tokens, r.warm_context) for r in reqs]
+
+
+def test_with_rate_population_invariance():
+    """Frontier confound regression: every ``with_rate`` point must price
+    goodput on the SAME request population — lengths, warm mix and decode
+    contexts bit-identical across rates; only arrival iterations move.
+    (A single shared RNG stream lets the arrival-gap draws perturb the
+    warm/ctx draws; per-field child generators make the invariance hold
+    by construction.)"""
+    base = RequestStream("inv", trace=SHAREGPT, rate=1.0, n_requests=48,
+                         warm_fraction=0.5, max_new_tokens_cap=8, seed=7)
+    ref = base.sample()
+    assert any(r.warm for r in ref) and any(not r.warm for r in ref)
+    for rate in (0.125, 0.5, 2.0, 16.0):
+        got = base.with_rate(rate).sample()
+        assert _population(got) == _population(ref), \
+            f"request population drifted at rate={rate}"
+    # the arrival process itself DOES change with the rate
+    slow = base.with_rate(0.125).sample()
+    fast = base.with_rate(16.0).sample()
+    assert slow[-1].arrival_iter > fast[-1].arrival_iter
+
+
+def test_arrival_process_does_not_perturb_population():
+    """Poisson and deterministic arrivals draw from independent child
+    generators, so switching the arrival process keeps the population."""
+    poi = RequestStream("inv", trace=SHAREGPT, n_requests=24,
+                        warm_fraction=0.4, seed=11)
+    det = RequestStream("inv", trace=SHAREGPT, n_requests=24,
+                        warm_fraction=0.4, seed=11,
+                        arrival="deterministic")
+    assert _population(poi.sample()) == _population(det.sample())
+
+
 def test_rollout_timings_math():
     # 2 cold requests arriving back to back, 1 slot, vllm separation:
     # it0 prefill A (first token), it1 prefill B?  no — B waits for A's slot

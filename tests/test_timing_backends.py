@@ -218,6 +218,33 @@ def test_second_search_mapping_skips_cost_table_build():
     assert stats["table_hits"] > 0 and stats["graph_hits"] > 0
 
 
+def test_cost_cache_lru_keeps_hot_entry_across_sweep(monkeypatch):
+    """Eviction regression: a hardware sweep over more points than the
+    cache capacity must NOT evict the scenario's hot graph/tables between
+    reuses. Under FIFO the hot entry was also the oldest, so every sweep
+    iteration rebuilt it (thrash); LRU refreshes recency on hit."""
+    spec = LLMSpec("cache-lru", 256, 4, 4, 64, 1024, 1000, 4)
+    hw = _hw()
+    monkeypatch.setattr(timing, "_CACHE_CAPACITY", 4)
+    timing.clear_cost_caches()
+
+    hot = [prefill_request(64)]
+    cold = [[prefill_request(64 + 8 * i)] for i in range(1, 7)]
+
+    timing.get_graph_and_tables(spec, hot, hw, 1, n_blocks=1)
+    misses = timing.cost_cache_stats()["graph_misses"]
+    # sweep over 6 cold points (> capacity), touching the hot entry
+    # between every one — the hot graph/tables must stay resident
+    for batch in cold:
+        timing.get_graph_and_tables(spec, batch, hw, 1, n_blocks=1)
+        timing.get_graph_and_tables(spec, hot, hw, 1, n_blocks=1)
+    stats = timing.cost_cache_stats()
+    assert stats["graph_misses"] == misses + len(cold)   # only cold built
+    assert stats["graph_hits"] >= len(cold)              # hot always hit
+    assert stats["table_hits"] >= len(cold)
+    timing.clear_cost_caches()
+
+
 # ---------------------------------------------------------------------------
 # On-device request-timing fold
 # ---------------------------------------------------------------------------
