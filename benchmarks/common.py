@@ -10,6 +10,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 FULL = bool(int(os.environ.get("COMPASS_FULL", "0")))
 
 
+def sync(x):
+    """``jax.block_until_ready`` on any pytree (numpy leaves pass
+    through). Every timed region must end with this on its final results —
+    JAX dispatch is asynchronous, so stopping a timer on un-synced device
+    arrays measures enqueue cost, not compute."""
+    import jax
+
+    return jax.block_until_ready(x)
+
+
 def ga_config():
     from repro.core.ga import GAConfig
 

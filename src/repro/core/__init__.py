@@ -24,6 +24,7 @@ from .compass import (  # noqa: F401
     scenario_score,
     search_mapping,
 )
+from .observability import cache_stats  # noqa: F401
 from .objectives import (  # noqa: F401
     EDP,
     EDPxMC,

@@ -280,6 +280,26 @@ def propose_next(gp: GPModel, rng: np.random.Generator, target_tops: float,
     return best_p if best_p is not None else random_point(rng, target_tops)
 
 
+def propose_next_batch(gp: GPModel, rng: np.random.Generator,
+                       target_tops: float, seen: set, k: int,
+                       outer_iters: int = 20, inner_iters: int = 6,
+                       restarts: int = 3) -> list[HardwarePoint]:
+    """K candidates for one BO round, proposed against the same (stale) GP
+    posterior: each proposal joins a local copy of ``seen`` so the batch is
+    duplicate-free — EI is re-maximised with earlier batch members
+    excluded, the liar-free variant of batch EI. ``k=1`` draws exactly the
+    ``propose_next`` rng sequence, so a batch size of one is bit-identical
+    to the serial proposer."""
+    local = set(seen)
+    out: list[HardwarePoint] = []
+    for _ in range(max(int(k), 1)):
+        p = propose_next(gp, rng, target_tops, local,
+                         outer_iters, inner_iters, restarts)
+        local.add(p.key())
+        out.append(p)
+    return out
+
+
 @dataclass
 class BOResult:
     best_point: HardwarePoint
@@ -295,8 +315,20 @@ def bo_search(
     iters: int = 20,
     init_points: int = 6,
     seed: int = 0,
+    batch: int = 1,
+    evaluate_batch: "Callable[[list[HardwarePoint]], Sequence[float]] | None"
+        = None,
 ) -> BOResult:
-    """Minimise ``objective`` over the hardware space."""
+    """Minimise ``objective`` over the hardware space.
+
+    ``batch`` proposes K candidates per GP round (``propose_next_batch``)
+    under the SAME total evaluation budget — ``iters`` points are still
+    evaluated, in ceil(iters/batch) GP fits, so ``history`` has one entry
+    per *round* (plus the init entry). ``evaluate_batch(points) ->
+    scores`` prices a whole proposal batch at once when given (compass
+    fans the points out across devices); it also prices the init sample.
+    ``batch=1`` with no ``evaluate_batch`` is bit-identical to the
+    historical serial loop."""
     rng = np.random.default_rng(seed)
     pts: list[HardwarePoint] = []
     seen: set = set()
@@ -305,17 +337,25 @@ def bo_search(
         if p.key() not in seen:
             pts.append(p)
             seen.add(p.key())
-    ys = [objective(p) for p in pts]
+    ys = [float(v) for v in evaluate_batch(pts)] if evaluate_batch \
+        else [objective(p) for p in pts]
     history = [float(np.min(ys))]
 
-    for _ in range(iters):
+    done = 0
+    while done < iters:
+        k = min(max(int(batch), 1), iters - done)
         gp = GPModel(list(pts), np.asarray(ys), target_tops)
         gp.fit()
-        nxt = propose_next(gp, rng, target_tops, seen)
-        seen.add(nxt.key())
-        pts.append(nxt)
-        ys.append(objective(nxt))
+        nxt = propose_next_batch(gp, rng, target_tops, seen, k)
+        for p in nxt:
+            seen.add(p.key())
+            pts.append(p)
+        if evaluate_batch:
+            ys.extend(float(v) for v in evaluate_batch(nxt))
+        else:
+            ys.extend(objective(p) for p in nxt)
         history.append(float(np.min(ys)))
+        done += k
 
     best_i = int(np.argmin(ys))
     return BOResult(best_point=pts[best_i], best_score=float(ys[best_i]),

@@ -164,6 +164,11 @@ class Scenario:
     objective: Objective | str | None = None  # default for explore()
     timing_backend: "TimingBackend | str | None" = None  # oracle|dense|pallas
     co_search: "CoSearchConfig | str | None" = None  # one_sweep|fixed_point|joint
+    # population-sharding knob threaded down to the JAX evaluators: None =
+    # all local devices (single-device hosts keep the exact legacy path),
+    # an int, a device list, or a 1-D jax.sharding.Mesh — see
+    # jax_evaluator.resolve_mesh
+    devices: object = None
     max_slots: int | None = None              # engine slots for the rollout
     max_stream_iters: int = 128               # rollout horizon (iterations)
     _rollout: StreamRollout | None = field(
@@ -277,8 +282,13 @@ def search_mapping(
     stream_rollout: StreamRollout | None = None,
     timing_backend: "TimingBackend | str | None" = None,
     co_search: "CoSearchConfig | str | None" = None,
+    devices: object = None,
 ) -> MappingSearchOutput:
     """GA mapping search shared across structurally-identical batches.
+
+    ``devices`` shards each group evaluator's population axis over a
+    device mesh (``jax_evaluator.resolve_mesh`` semantics; ``None`` = all
+    local devices, bit-identical to the single-device path on one device).
 
     ``objective`` must be MC-free (``uses_mc=False``): monetary cost is
     constant for a fixed hardware config, so an MC-bearing objective here
@@ -343,7 +353,7 @@ def search_mapping(
     group_evals = {
         key: _make_population_eval([graphs[i] for i in idxs],
                                    [tables[i] for i in idxs], hw, use_jax,
-                                   timing_backend)
+                                   timing_backend, devices=devices)
         for key, idxs in groups.items()
     }
 
@@ -628,17 +638,17 @@ def _search_joint(ctx: _SearchContext) -> MappingSearchOutput:
 
 
 def _make_population_eval(graphs, tables, hw, use_jax: bool | None,
-                          timing_backend=None):
+                          timing_backend=None, devices=None):
     """Returns eval(population) -> ((B, P) latency_s, (B, P) energy_j) over
     the group's batches.
 
     ``timing_backend`` selects the pass-B engine (``oracle`` routes to the
     pure-numpy evaluator directly — explicit, so no fallback warning).
     Otherwise the JAX group evaluator is used when available (one jitted
-    call per GA generation for ALL batches of the group); ``use_jax=True``
-    raises on any failure, ``use_jax=None`` warns — loudly, a silent numpy
-    fallback is an order-of-magnitude GA slowdown — and degrades to the
-    numpy oracle."""
+    call per GA generation for ALL batches of the group), its population
+    axis sharded per ``devices``; ``use_jax=True`` raises on any failure,
+    ``use_jax=None`` warns — loudly, a silent numpy fallback is an
+    order-of-magnitude GA slowdown — and degrades to the numpy oracle."""
     backend = resolve_timing_backend(timing_backend)
     oracle = isinstance(backend, OracleTimingBackend)
     if not oracle and (use_jax is None or use_jax):
@@ -646,7 +656,8 @@ def _make_population_eval(graphs, tables, hw, use_jax: bool | None,
             from . import jax_evaluator
 
             ge = jax_evaluator.GroupPopulationEvaluator(graphs, tables, hw,
-                                                        backend=backend)
+                                                        backend=backend,
+                                                        devices=devices)
             return ge.evaluate_population
         except Exception as e:
             if use_jax:
@@ -703,10 +714,13 @@ def hardware_objective(
     use_jax: bool | None = None,
     timing_backend: "TimingBackend | str | None" = None,
     co_search: "CoSearchConfig | str | None" = None,
+    devices: object = None,
 ) -> tuple[float, MappingSearchOutput]:
     """Fitness of one hardware point: mapping search under the scenario's
     rollout, scored by ``objective`` (default: the scenario's, else
-    EDP·MC). ``timing_backend`` / ``co_search`` override the scenario's."""
+    EDP·MC). ``timing_backend`` / ``co_search`` / ``devices`` override the
+    scenario's (batched BO uses the ``devices`` override to pin each
+    concurrently-priced hardware point to its own device)."""
     obj = scenario.resolved_objective() if objective is None \
         else get_objective(objective)
     hw = point.to_config(scenario.target_tops)
@@ -722,11 +736,13 @@ def hardware_objective(
         else resolve_timing_backend(timing_backend)
     cs = scenario.resolved_co_search() if co_search is None \
         else get_co_search(co_search)
+    devs = scenario.devices if devices is None else devices
     out = search_mapping(scenario.spec, batches, hw, mbs, ga_config,
                          objective=obj.inner(), n_blocks=scenario.n_blocks,
                          use_jax=use_jax,
                          stream_rollout=None if ro.synthetic else ro,
-                         timing_backend=backend, co_search=cs)
+                         timing_backend=backend, co_search=cs,
+                         devices=devs)
     score = scenario_score(scenario, obj, out.latency_s, out.energy_j,
                            out.mc_total, out.batch_latencies)
     return score, out
@@ -742,6 +758,9 @@ def explore(
     use_jax: bool | None = None,
     timing_backend: "TimingBackend | str | None" = None,
     co_search: "CoSearchConfig | str | None" = None,
+    devices: object = None,
+    bo_batch: int = 1,
+    bo_workers: int | None = None,
 ) -> CompassResult:
     """Full Compass loop (Eq. 1): BO over hardware, GA over mappings, the
     scenario's stream rolled out under its scheduler as the workload.
@@ -749,21 +768,59 @@ def explore(
     The single declarative entry point: everything workload-related lives
     on the ``Scenario`` (``stream=``, ``scheduler=``, ``objective=``,
     ``timing_backend=``, ``co_search=``); ``objective`` /
-    ``timing_backend`` / ``co_search`` here override the scenario's
-    defaults when given.
+    ``timing_backend`` / ``co_search`` / ``devices`` here override the
+    scenario's defaults when given.
+
+    ``bo_batch`` batches the hardware axis: K candidates are proposed per
+    BO round (``bo.propose_next_batch``) and priced concurrently — one
+    mapping search per hardware point, round-robin over the local devices
+    (each search pinned to its own device), up to ``bo_workers`` threads
+    (default: min(batch, local device count)). The total evaluation budget
+    is unchanged — ``bo_batch`` trades GP-posterior freshness for
+    wall-clock. ``bo_batch=1`` is bit-identical to the serial loop.
     """
     cache: dict[tuple, tuple[float, MappingSearchOutput]] = {}
+
+    def price(point: HardwarePoint, devs) -> tuple[float, MappingSearchOutput]:
+        return hardware_objective(scenario, point, ga_config, objective,
+                                  use_jax, timing_backend, co_search,
+                                  devices=devs)
 
     def obj(point: HardwarePoint) -> float:
         key = point.key()
         if key not in cache:
-            cache[key] = hardware_objective(scenario, point, ga_config,
-                                            objective, use_jax,
-                                            timing_backend, co_search)
+            cache[key] = price(point, devices)
         return cache[key][0]
 
+    evaluate_batch = None
+    if bo_batch > 1:
+        def evaluate_batch(points):
+            # dedup by key before spending searches; BO never re-proposes
+            # a seen key, but init sampling and K>mesh round-robin may
+            todo = {p.key(): p for p in points if p.key() not in cache}
+            pts = list(todo.values())
+            import jax
+
+            local = jax.devices()
+            if len(pts) > 1 and len(local) > 1 and devices is None:
+                from concurrent.futures import ThreadPoolExecutor
+
+                workers = bo_workers or min(len(pts), len(local))
+                with ThreadPoolExecutor(max_workers=workers) as ex:
+                    futs = [
+                        ex.submit(price, p, [local[i % len(local)]])
+                        for i, p in enumerate(pts)
+                    ]
+                    for p, f in zip(pts, futs):
+                        cache[p.key()] = f.result()
+            else:
+                for p in pts:
+                    cache[p.key()] = price(p, devices)
+            return [cache[p.key()][0] for p in points]
+
     bo = bo_search(obj, scenario.target_tops, iters=bo_iters,
-                   init_points=bo_init, seed=seed)
+                   init_points=bo_init, seed=seed, batch=bo_batch,
+                   evaluate_batch=evaluate_batch)
     best = bo.best_point
     _, mapping = cache[best.key()]
     return CompassResult(

@@ -69,6 +69,13 @@ class CostTables:
     pred_hi: np.ndarray           # (M,)
     flops: np.ndarray             # (rows, M)
 
+    @property
+    def nbytes(self) -> int:
+        """Host-resident bytes across every table array — feeds the
+        unified ``repro.core.cache_stats()`` memory accounting."""
+        return sum(int(v.nbytes) for v in vars(self).values()
+                   if isinstance(v, np.ndarray))
+
     @staticmethod
     def build(graph: ExecutionGraph, hw: HardwareConfig) -> "CostTables":
         """Vectorised table build: all GEMMs of the graph are flattened into

@@ -370,6 +370,10 @@ def ga_search(
     mutation operate on the stacked arrays, and ``eval_fn`` receives the
     whole ``StackedPopulation`` when it advertises ``accepts_stacked``
     (one jitted device call per generation), else a list of encodings.
+    Device scaling lives entirely inside ``eval_fn``: the JAX population
+    evaluators shard the population axis over a device mesh
+    (``jax_evaluator.resolve_mesh``) transparently — scores come back in
+    population order either way, so the GA itself is placement-agnostic.
 
     ``warm_start`` (a ``StackedPopulation`` or encoding list, typically the
     previous co-search round's elites) seeds the front of the initial
@@ -457,7 +461,10 @@ def joint_ga_search(
     """One GA population spanning every structure group of a scenario
     (joint cross-group co-search). Individual ``i`` is the tuple of group
     encodings ``(pops[key][i] for key in shapes)`` — the concatenated
-    segment encoding of the whole scenario.
+    segment encoding of the whole scenario. Like :func:`ga_search`, the
+    driver never sees device placement: a ``JointStreamEvaluator`` built
+    on sharded group evaluators scores each group's population shard-wise
+    and the joint loop consumes the merged (P,) scores unchanged.
 
     Selection and crossover act on *shared* parent indices and a shared
     crossover mask, so a child's cross-group genotype stays coupled; each

@@ -36,9 +36,23 @@ when the segmentation is unchanged. Per-batch cost tables are uploaded
 once per distinct table set (module-level keyed cache) and the device
 buffers persist across GA generations AND across ``search_mapping`` calls
 on the same scenario.
+
+**Multi-device sharding.** Every per-individual quantity is independent
+along the population axis (the whole pipeline above is a vmap), so the
+evaluators scale out as pure data parallelism: ``devices=`` (``None`` =
+all local devices, an int, a device list, or a 1-D ``jax.sharding.Mesh``)
+shards the population over a ``("pop",)`` mesh via ``jit(shard_map(...))``
+— each device runs the identical vmapped program on its population shard,
+so per-individual results are *bit-identical* to the single-device path.
+Populations are padded to a multiple of the device count (padding rows are
+sliced off the outputs) and the stacked cost-table buffers are replicated
+once per mesh device through the same persistent cache, keyed on a device
+signature. On one default device the evaluators take the exact legacy
+code path.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
@@ -47,6 +61,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from .encoding import MappingEncoding, ScheduledOrderCache, as_stacked
 from .evaluator import CostTables
@@ -282,14 +298,132 @@ _grouped_population_pass = partial(
     _grouped_population_pass_impl)
 
 
+# --------------------------------------------------------------------------
+# Population sharding over a device mesh
+#
+# All per-individual work is a vmap, so sharding the population axis is
+# pure data parallelism: shard_map hands each device its population slice
+# and the device runs the SAME program the single-device path jits
+# (including the pallas kernel when selected). Per-individual results are
+# therefore bit-identical to the unsharded evaluator — the parity suite
+# (tests/test_sharded_eval.py) locks this down under 8 forced host devices.
+# --------------------------------------------------------------------------
+
+_POP_AXIS = "pop"
+
+
+def resolve_mesh(devices=None) -> "Mesh | None":
+    """Resolve the evaluators' ``devices=`` knob into a 1-D population mesh.
+
+    ``None`` -> all local devices (the default: a multi-device host shards
+    automatically); an int N -> the first N local devices; a sequence of
+    ``jax.Device`` -> exactly those (batched BO uses this to pin one
+    hardware point per device); a ``Mesh`` -> itself (must be 1-D).
+
+    Returns ``None`` for the single-*default*-device case: the evaluators
+    then take the exact pre-sharding code path, so single-device behaviour
+    is bit-identical to older revisions by construction. A single
+    non-default device still gets a 1-device mesh (that is how work is
+    pinned off device 0)."""
+    if isinstance(devices, Mesh):
+        if len(devices.axis_names) != 1:
+            raise ValueError("population mesh must be 1-D, got axes "
+                             f"{devices.axis_names!r}")
+        devs = list(devices.devices.flat)
+    elif devices is None:
+        devs = list(jax.devices())
+    elif isinstance(devices, int):
+        local = jax.devices()
+        if not 1 <= devices <= len(local):
+            raise ValueError(f"devices={devices} but {len(local)} local "
+                             "devices are available")
+        devs = local[:devices]
+    else:
+        devs = list(devices)
+        if not devs:
+            raise ValueError("devices= must name at least one device")
+    if len(devs) == 1 and devs[0] == jax.devices()[0]:
+        return None
+    return Mesh(np.array(devs), (_POP_AXIS,))
+
+
+def _mesh_key(mesh: "Mesh") -> tuple:
+    return tuple(d.id for d in mesh.devices.flat)
+
+
+def _replicated(arrays: dict, mesh: "Mesh") -> dict:
+    """Place every array fully replicated on the mesh (one resident copy
+    per device) so the sharded passes never re-broadcast per call."""
+    sh = NamedSharding(mesh, PartitionSpec())
+    return {k: jax.device_put(v, sh) for k, v in arrays.items()}
+
+
+def pad_population(orders: np.ndarray, l2c: np.ndarray,
+                   multiple: int) -> tuple[np.ndarray, np.ndarray, int]:
+    """Pad the population axis (axis 0 of both arrays) up to a multiple of
+    the device count by repeating the last individual. Individuals are
+    evaluated independently, so padding is masked out by slicing the
+    outputs back to the true population size — it can never contaminate
+    real results. Returns ``(orders, l2c, true_population)``."""
+    p = orders.shape[0]
+    pad = (-p) % multiple
+    if pad:
+        orders = np.concatenate(
+            [orders, np.repeat(orders[-1:], pad, axis=0)])
+        l2c = np.concatenate([l2c, np.repeat(l2c[-1:], pad, axis=0)])
+    return orders, l2c, p
+
+
+_SHARDED_PASS_CACHE: dict = {}
+_SHARDED_PASS_LOCK = threading.Lock()
+
+
+def _sharded_pass(mesh: "Mesh", grouped: bool, n_chips: int, backend: str,
+                  interpret: bool, full: bool):
+    """``jit(shard_map(...))`` wrapper over the population axis, cached per
+    (mesh devices, grouped, statics) for the process lifetime — like the
+    unsharded passes, repeated searches on the same shapes never rebuild.
+    The statics dict rides along replicated (in_specs ``P()``)."""
+    key = (_mesh_key(mesh), grouped, n_chips, backend, interpret, full)
+    with _SHARDED_PASS_LOCK:
+        fn = _SHARDED_PASS_CACHE.get(key)
+    if fn is not None:
+        return fn
+    impl = _grouped_population_pass_impl if grouped else _population_pass_impl
+
+    def body(order_rc, l2c, static):
+        return impl(order_rc, l2c, n_chips=n_chips, backend=backend,
+                    interpret=interpret, full=full, **static)
+
+    # population axis: 0 on every output of the flat pass, 1 on the
+    # grouped pass's (B, P, ...) outputs
+    out_spec = (PartitionSpec(None, _POP_AXIS) if grouped
+                else PartitionSpec(_POP_AXIS))
+    n_out = 5 if full else 2
+    fn = jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(PartitionSpec(_POP_AXIS), PartitionSpec(_POP_AXIS),
+                  PartitionSpec()),
+        out_specs=(out_spec,) * n_out,
+        check_rep=False))
+    with _SHARDED_PASS_LOCK:
+        _SHARDED_PASS_CACHE.setdefault(key, fn)
+        return _SHARDED_PASS_CACHE[key]
+
+
 def jit_cache_sizes() -> dict:
-    """Compile-cache sizes of the two jitted entry points — one entry per
+    """Compile-cache sizes of the jitted entry points — one entry per
     distinct (P, T, rows, M, C[, B], backend) key across the process
-    lifetime. Used by tests/benchmarks to assert nothing retraces per
-    generation."""
+    lifetime (plus one ``sharded_*`` wrapper per mesh signature). Used by
+    tests/benchmarks to assert nothing retraces per generation."""
+    with _SHARDED_PASS_LOCK:
+        sharded_fns = list(_SHARDED_PASS_CACHE.values())
     return {
         "population_pass": int(_population_pass._cache_size()),
         "grouped_population_pass": int(_grouped_population_pass._cache_size()),
+        "sharded_pass_wrappers": len(sharded_fns),
+        "sharded_pass_compiles": sum(int(f._cache_size())
+                                     for f in sharded_fns),
     }
 
 
@@ -338,43 +472,69 @@ def _table_arrays(t: CostTables) -> dict:
 # Persistent device-resident table buffers
 #
 # The stacked (B, rows, M, D) table tensors are the heaviest host->device
-# upload of a search; they depend only on the CostTables identity, so one
-# keyed cache pins them on device across GA generations, across
-# search_mapping calls on the same scenario, and across evaluator
-# instances. Keys are object ids; the cache holds the tables themselves so
-# a live entry's ids can never be recycled. Eviction is LRU (hits refresh
-# recency) — FIFO would evict the scenario's own hot buffers mid-sweep.
+# upload of a search; they depend only on the CostTables identity and the
+# device placement, so one keyed cache pins them on device across GA
+# generations, across search_mapping calls on the same scenario, and
+# across evaluator instances. Keys are object ids plus a device signature
+# (the mesh's device ids, or None for the single-default-device path):
+# a sharded evaluator gets its buffers replicated once per mesh device and
+# never collides with the single-device entry for the same tables. The
+# cache holds the tables themselves so a live entry's ids can never be
+# recycled. Eviction is LRU (hits refresh recency) — FIFO would evict the
+# scenario's own hot buffers mid-sweep. Lock-guarded: batched BO prices
+# several hardware points from worker threads.
 # --------------------------------------------------------------------------
 
 _DEVICE_TABLE_CACHE: "OrderedDict" = OrderedDict()
 _DEVICE_CACHE_CAPACITY = 64
 _DEVICE_CACHE_STATS = {"hits": 0, "misses": 0}
+_DEVICE_CACHE_LOCK = threading.Lock()
 
 
-def _stacked_device_tables(tables: "tuple[CostTables, ...]") -> dict:
-    key = tuple(id(t) for t in tables)
-    hit = _DEVICE_TABLE_CACHE.get(key)
-    if hit is not None:
-        _DEVICE_CACHE_STATS["hits"] += 1
-        _DEVICE_TABLE_CACHE.move_to_end(key)
-        return hit[1]
-    _DEVICE_CACHE_STATS["misses"] += 1
-    if len(_DEVICE_TABLE_CACHE) >= _DEVICE_CACHE_CAPACITY:
-        _DEVICE_TABLE_CACHE.popitem(last=False)                   # LRU
-    per_batch = [_table_arrays(t) for t in tables]
-    if len(tables) == 1:
-        stacked = {k: jnp.asarray(per_batch[0][k]) for k in per_batch[0]}
-    else:
-        stacked = {
-            k: jnp.asarray(np.stack([arrs[k] for arrs in per_batch]))
-            for k in per_batch[0]
-        }
-    _DEVICE_TABLE_CACHE[key] = (tables, stacked)
-    return stacked
+def _stacked_device_tables(tables: "tuple[CostTables, ...]",
+                           mesh: "Mesh | None" = None) -> dict:
+    key = (None if mesh is None else _mesh_key(mesh),
+           tuple(id(t) for t in tables))
+    with _DEVICE_CACHE_LOCK:
+        hit = _DEVICE_TABLE_CACHE.get(key)
+        if hit is not None:
+            _DEVICE_CACHE_STATS["hits"] += 1
+            _DEVICE_TABLE_CACHE.move_to_end(key)
+            return hit[1]
+        _DEVICE_CACHE_STATS["misses"] += 1
+        if len(_DEVICE_TABLE_CACHE) >= _DEVICE_CACHE_CAPACITY:
+            _DEVICE_TABLE_CACHE.popitem(last=False)               # LRU
+        per_batch = [_table_arrays(t) for t in tables]
+        if len(tables) == 1:
+            host = per_batch[0]
+        else:
+            host = {k: np.stack([arrs[k] for arrs in per_batch])
+                    for k in per_batch[0]}
+        if mesh is None:
+            stacked = {k: jnp.asarray(v) for k, v in host.items()}
+        else:
+            stacked = _replicated(host, mesh)
+        _DEVICE_TABLE_CACHE[key] = (tables, stacked)
+        return stacked
 
 
 def device_table_cache_stats() -> dict:
-    return dict(_DEVICE_CACHE_STATS, entries=len(_DEVICE_TABLE_CACHE))
+    with _DEVICE_CACHE_LOCK:
+        return dict(_DEVICE_CACHE_STATS, entries=len(_DEVICE_TABLE_CACHE))
+
+
+def device_table_resident_bytes() -> "dict[str, int]":
+    """Per-device resident bytes of the cached stacked table buffers —
+    replication cost is visible device by device in ``cache_stats()``."""
+    with _DEVICE_CACHE_LOCK:
+        entries = [stacked for (_t, stacked) in _DEVICE_TABLE_CACHE.values()]
+    out: "dict[str, int]" = {}
+    for stacked in entries:
+        for arr in stacked.values():
+            for shard in getattr(arr, "addressable_shards", []):
+                dev = str(shard.device)
+                out[dev] = out.get(dev, 0) + int(shard.data.nbytes)
+    return out
 
 
 def _resolve_jax_backend(backend) -> tuple[str, bool]:
@@ -393,19 +553,28 @@ def _resolve_jax_backend(backend) -> tuple[str, bool]:
 
 @dataclass
 class PopulationEvaluator:
-    """Evaluates GA populations on-device; matches the numpy oracle."""
+    """Evaluates GA populations on-device; matches the numpy oracle.
+
+    ``devices`` shards the population axis over a device mesh (see
+    :func:`resolve_mesh`); the default ``None`` uses all local devices and
+    collapses to the exact single-device path on a one-device host."""
 
     graph: ExecutionGraph
     tables: CostTables
     hw: HardwareConfig
     backend: "TimingBackend | str | None" = None
+    devices: "int | Sequence | Mesh | None" = None
 
     def __post_init__(self):
         g, hw = self.graph, self.hw
         self._backend, self._interpret = _resolve_jax_backend(self.backend)
+        self._mesh = resolve_mesh(self.devices)
+        statics = _shared_statics(g, hw)
+        if self._mesh is not None:
+            statics = _replicated(statics, self._mesh)
         self._static = dict(
-            _shared_statics(g, hw),
-            **_stacked_device_tables((self.tables,)),
+            statics,
+            **_stacked_device_tables((self.tables,), mesh=self._mesh),
         )
         self._n_chips = hw.n_chiplets
         self._order_cache = ScheduledOrderCache(g.rows, g.n_cols)
@@ -413,10 +582,20 @@ class PopulationEvaluator:
     def _run(self, population, full: bool = False):
         pop = as_stacked(population)
         orders = self._order_cache.orders(pop.segmentation)
-        return _population_pass(
-            jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
-            n_chips=self._n_chips, backend=self._backend,
-            interpret=self._interpret, full=full, **self._static)
+        if self._mesh is None:
+            return _population_pass(
+                jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
+                n_chips=self._n_chips, backend=self._backend,
+                interpret=self._interpret, full=full, **self._static)
+        orders, l2c, p0 = pad_population(
+            np.asarray(orders), np.asarray(pop.layer_to_chip),
+            self._mesh.size)
+        fn = _sharded_pass(self._mesh, False, self._n_chips, self._backend,
+                           self._interpret, full)
+        out = fn(orders, l2c, self._static)
+        if p0 != orders.shape[0]:
+            out = tuple(o[:p0] for o in out)
+        return out
 
     def evaluate_population(
         self, population: "Sequence[MappingEncoding]"
@@ -446,12 +625,17 @@ class GroupPopulationEvaluator:
     per-batch cost tables live on device in a persistent keyed cache and
     are vmapped over, while the mapping-structural pass runs once per
     individual. Returns (B, P) latency/energy; ``timing_matrix`` exposes
-    the full per-op (B, P, T) matrix the SLO objectives fold."""
+    the full per-op (B, P, T) matrix the SLO objectives fold.
+
+    ``devices`` shards the population axis (see :func:`resolve_mesh`):
+    the batch axis stays whole on every device (tables replicated), the
+    population splits — the axis GA scaling actually grows."""
 
     graphs: Sequence[ExecutionGraph]
     tables: Sequence[CostTables]
     hw: HardwareConfig
     backend: "TimingBackend | str | None" = None
+    devices: "int | Sequence | Mesh | None" = None
 
     def __post_init__(self):
         g0 = self.graphs[0]
@@ -464,10 +648,14 @@ class GroupPopulationEvaluator:
                    for g in self.graphs), \
             "group batches must share predecessor intervals"
         self._backend, self._interpret = _resolve_jax_backend(self.backend)
-        stacked = _stacked_device_tables(tuple(self.tables))
+        self._mesh = resolve_mesh(self.devices)
+        stacked = _stacked_device_tables(tuple(self.tables), mesh=self._mesh)
         if len(self.tables) == 1:
             stacked = {k: v[None] for k, v in stacked.items()}
-        self._static = dict(_shared_statics(g0, self.hw), **stacked)
+        statics = _shared_statics(g0, self.hw)
+        if self._mesh is not None:
+            statics = _replicated(statics, self._mesh)
+        self._static = dict(statics, **stacked)
         self._n_chips = self.hw.n_chiplets
         self._order_cache = ScheduledOrderCache(g0.rows, g0.n_cols)
         self._scales = np.array([g.scale for g in self.graphs])
@@ -479,10 +667,20 @@ class GroupPopulationEvaluator:
     def _run(self, population, full: bool = False):
         pop = as_stacked(population)
         orders = self._order_cache.orders(pop.segmentation)
-        return _grouped_population_pass(
-            jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
-            n_chips=self._n_chips, backend=self._backend,
-            interpret=self._interpret, full=full, **self._static)
+        if self._mesh is None:
+            return _grouped_population_pass(
+                jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
+                n_chips=self._n_chips, backend=self._backend,
+                interpret=self._interpret, full=full, **self._static)
+        orders, l2c, p0 = pad_population(
+            np.asarray(orders), np.asarray(pop.layer_to_chip),
+            self._mesh.size)
+        fn = _sharded_pass(self._mesh, True, self._n_chips, self._backend,
+                           self._interpret, full)
+        out = fn(orders, l2c, self._static)
+        if p0 != orders.shape[0]:
+            out = tuple(o[:, :p0] for o in out)
+        return out
 
     def evaluate_population(
         self, population
@@ -530,7 +728,11 @@ class JointStreamEvaluator:
     ``group_evals`` maps group key -> ``eval(pop) -> ((B, P) latency_s,
     (B, P) energy_j)`` — a ``GroupPopulationEvaluator.evaluate_population``
     or the numpy-oracle fallback, so joint mode works on every timing
-    backend; ``groups`` maps group key -> rollout batch indices."""
+    backend; ``groups`` maps group key -> rollout batch indices. Device
+    sharding is inherited transitively: when the group evaluators carry a
+    ``devices=`` mesh, every group's population shards over it and the
+    assembled latency matrix (host-side) is already in population order —
+    joint scores are bit-identical across device counts."""
 
     group_evals: "dict[tuple, object]"
     groups: "dict[tuple, list[int]]"

@@ -43,6 +43,7 @@ Backend selection: ``Scenario(timing_backend=...)`` > the
 from __future__ import annotations
 
 import os
+import threading
 import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -450,11 +451,19 @@ def attribute_group_violations(rollout, batch_latency_s, violating,
 # over more than _CACHE_CAPACITY points evicted the very entry it was
 # about to reuse — the scenario's graphs/tables are the HOTTEST entries
 # but also the OLDEST, so every sweep iteration rebuilt them (thrash).
+#
+# Lock-guarded get-or-build: batched BO prices several hardware points
+# from worker threads, and a concurrent miss must not hand two threads two
+# distinct CostTables objects for the same key — table *identity* is the
+# device-buffer cache key one level up, so duplicate identities would
+# duplicate device uploads (and an unguarded popitem could corrupt the
+# OrderedDict outright).
 
 
 _GRAPH_CACHE: "OrderedDict" = OrderedDict()
 _TABLE_CACHE: "OrderedDict" = OrderedDict()
 _CACHE_CAPACITY = 256
+_CACHE_LOCK = threading.Lock()
 _STATS = {"graph_hits": 0, "graph_misses": 0,
           "table_hits": 0, "table_misses": 0}
 
@@ -468,17 +477,18 @@ def get_execution_graph(spec, batch, micro_batch, tp, n_blocks=None):
     from .workload import build_execution_graph
 
     key = _graph_key(spec, batch, micro_batch, tp, n_blocks)
-    g = _GRAPH_CACHE.get(key)
-    if g is None:
-        _STATS["graph_misses"] += 1
-        if len(_GRAPH_CACHE) >= _CACHE_CAPACITY:
-            _GRAPH_CACHE.popitem(last=False)             # LRU eviction
-        g = build_execution_graph(spec, list(batch), micro_batch, tp=tp,
-                                  n_blocks=n_blocks)
-        _GRAPH_CACHE[key] = g
-    else:
-        _STATS["graph_hits"] += 1
-        _GRAPH_CACHE.move_to_end(key)                    # refresh hot entry
+    with _CACHE_LOCK:
+        g = _GRAPH_CACHE.get(key)
+        if g is None:
+            _STATS["graph_misses"] += 1
+            if len(_GRAPH_CACHE) >= _CACHE_CAPACITY:
+                _GRAPH_CACHE.popitem(last=False)         # LRU eviction
+            g = build_execution_graph(spec, list(batch), micro_batch, tp=tp,
+                                      n_blocks=n_blocks)
+            _GRAPH_CACHE[key] = g
+        else:
+            _STATS["graph_hits"] += 1
+            _GRAPH_CACHE.move_to_end(key)                # refresh hot entry
     return g
 
 
@@ -488,16 +498,17 @@ def get_cost_tables(graph, graph_key, hw):
     from .evaluator import CostTables
 
     key = (graph_key, hw.spec_name)
-    t = _TABLE_CACHE.get(key)
-    if t is None:
-        _STATS["table_misses"] += 1
-        if len(_TABLE_CACHE) >= _CACHE_CAPACITY:
-            _TABLE_CACHE.popitem(last=False)             # LRU eviction
-        t = CostTables.build(graph, hw)
-        _TABLE_CACHE[key] = t
-    else:
-        _STATS["table_hits"] += 1
-        _TABLE_CACHE.move_to_end(key)                    # refresh hot entry
+    with _CACHE_LOCK:
+        t = _TABLE_CACHE.get(key)
+        if t is None:
+            _STATS["table_misses"] += 1
+            if len(_TABLE_CACHE) >= _CACHE_CAPACITY:
+                _TABLE_CACHE.popitem(last=False)         # LRU eviction
+            t = CostTables.build(graph, hw)
+            _TABLE_CACHE[key] = t
+        else:
+            _STATS["table_hits"] += 1
+            _TABLE_CACHE.move_to_end(key)                # refresh hot entry
     return t
 
 
@@ -511,11 +522,16 @@ def get_graph_and_tables(spec, batch, hw, micro_batch, n_blocks=None):
 
 
 def cost_cache_stats() -> dict:
-    return dict(_STATS, graphs=len(_GRAPH_CACHE), tables=len(_TABLE_CACHE))
+    with _CACHE_LOCK:
+        return dict(_STATS, graphs=len(_GRAPH_CACHE),
+                    tables=len(_TABLE_CACHE),
+                    table_host_bytes=sum(t.nbytes
+                                         for t in _TABLE_CACHE.values()))
 
 
 def clear_cost_caches() -> None:
-    _GRAPH_CACHE.clear()
-    _TABLE_CACHE.clear()
-    for k in _STATS:
-        _STATS[k] = 0
+    with _CACHE_LOCK:
+        _GRAPH_CACHE.clear()
+        _TABLE_CACHE.clear()
+        for k in _STATS:
+            _STATS[k] = 0

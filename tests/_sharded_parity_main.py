@@ -1,0 +1,143 @@
+"""Sharded-vs-single-device parity checks, executed in a subprocess.
+
+jax fixes the host device count at first import, so the in-process test
+session (pinned to 1 device by conftest) cannot flip to 8 — the parity
+test launches this script with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` instead. Every
+check asserts *bitwise* equality: the sharded evaluators are pure data
+parallelism over the population axis, so any drift at all is a bug.
+
+Prints ``PARITY-OK`` as the last line on success (the parent test asserts
+on it); any assertion failure surfaces through the non-zero exit code.
+"""
+import numpy as np
+
+import jax
+
+assert jax.device_count() >= 8, (
+    f"expected 8 forced host devices, got {jax.device_count()} — "
+    "was XLA_FLAGS stripped?")
+
+from repro.core.compass import search_mapping                     # noqa: E402
+from repro.core.encoding import pipeline_parallel, random_encoding  # noqa: E402
+from repro.core.evaluator import CostTables                       # noqa: E402
+from repro.core.ga import GAConfig, ga_search                     # noqa: E402
+from repro.core.hardware import make_hardware                     # noqa: E402
+from repro.core.jax_evaluator import (                            # noqa: E402
+    GroupPopulationEvaluator,
+    PopulationEvaluator,
+    device_table_resident_bytes,
+)
+from repro.core.objectives import GoodputUnderSLO                 # noqa: E402
+from repro.core.streams import RequestStream, StreamRequest, rollout  # noqa: E402
+from repro.core.workload import (                                 # noqa: E402
+    LLMSpec,
+    build_execution_graph,
+    decode_request,
+    prefill_request,
+)
+from repro.serving.scheduler import get_scheduler                 # noqa: E402
+
+SPEC = LLMSpec("shard-par", 256, 4, 4, 64, 1024, 1000, 8)
+HW = make_hardware(64, "M", layout=None, tensor_parallel=2)
+HW = HW.replace(layout=tuple(["WS", "OS"] * (HW.n_chiplets // 2)))
+
+
+def _graph(lengths):
+    return build_execution_graph(
+        SPEC, [prefill_request(lengths[0]), prefill_request(lengths[1]),
+               decode_request(lengths[2])],
+        micro_batch_size=2, tp=2, n_blocks=2)
+
+
+def _fitness(ge):
+    def eval_fn(pop):
+        lat, en = ge.evaluate_population(pop)
+        return (lat * en).mean(axis=0)
+
+    eval_fn.accepts_stacked = True
+    return eval_fn
+
+
+def main():
+    g1, g2 = _graph((128, 64, 300)), _graph((96, 48, 200))
+    t1, t2 = CostTables.build(g1, HW), CostTables.build(g2, HW)
+    rng = np.random.default_rng(0)
+
+    # -- evaluator parity: populations divisible (16) and non-divisible
+    # (11, 3) by the 8-device mesh, flat and grouped, incl. the full
+    # timing matrix the SLO objectives fold -----------------------------
+    for p_size in (16, 11, 3):
+        pop = [pipeline_parallel(g1.rows, g1.n_cols, HW.n_chiplets)]
+        pop += [random_encoding(rng, g1.rows, g1.n_cols, HW.n_chiplets)
+                for _ in range(p_size - 1)]
+        pe1 = PopulationEvaluator(g1, t1, HW, devices=1)
+        pe8 = PopulationEvaluator(g1, t1, HW)      # default: all 8 devices
+        for a, b in zip(pe1.evaluate_population(pop),
+                        pe8.evaluate_population(pop)):
+            assert np.array_equal(a, b), f"flat parity broke at P={p_size}"
+        ge1 = GroupPopulationEvaluator([g1, g2], [t1, t2], HW, devices=1)
+        ge8 = GroupPopulationEvaluator([g1, g2], [t1, t2], HW, devices=8)
+        for a, b in zip(ge1.evaluate_population(pop),
+                        ge8.evaluate_population(pop)):
+            assert np.array_equal(a, b), f"group parity broke at P={p_size}"
+        tm1, tm8 = ge1.timing_matrix(pop), ge8.timing_matrix(pop)
+        assert np.array_equal(tm1.op_end_s, tm8.op_end_s)
+        assert np.array_equal(tm1.op_start_s, tm8.op_start_s)
+        assert np.array_equal(tm1.chip_free_s, tm8.chip_free_s)
+
+    # replication is real: every mesh device holds resident table bytes
+    resident = device_table_resident_bytes()
+    assert len(resident) >= 8, f"expected 8 resident devices: {resident}"
+
+    # -- GA search identity: same seed, sharded vs single-device fitness,
+    # the whole history must match bitwise ------------------------------
+    cfg = GAConfig(population=12, generations=4, seed=0)
+    r1 = ga_search(_fitness(ge1), g1.rows, g1.n_cols, HW.n_chiplets, cfg)
+    r8 = ga_search(_fitness(ge8), g1.rows, g1.n_cols, HW.n_chiplets, cfg)
+    assert r1.best_score == r8.best_score
+    assert r1.history == r8.history
+
+    # -- warm-start invariants (PRs 4-5) on the sharded evaluator: warm
+    # runs stay device-count-invariant, and re-seeded elites are re-scored
+    # so the warm best can never regress past the cold best --------------
+    warm = r8.final_population.top_k(r8.final_scores, 4)
+    w1 = ga_search(_fitness(ge1), g1.rows, g1.n_cols, HW.n_chiplets, cfg,
+                   warm_start=warm)
+    w8 = ga_search(_fitness(ge8), g1.rows, g1.n_cols, HW.n_chiplets, cfg,
+                   warm_start=warm)
+    assert w1.best_score == w8.best_score
+    assert w1.history == w8.history
+    assert w8.best_score <= r8.best_score * (1 + 1e-12)
+
+    # -- stream co-search parity: fixed_point and joint modes through
+    # search_mapping on a multi-group rollout, sharded vs single-device --
+    spec_ga = LLMSpec("ga-t", 256, 4, 4, 64, 1024, 1000, 4)
+    stream = RequestStream.from_requests([
+        StreamRequest(96, 3),
+        StreamRequest(40, 5, warm_context=50),
+        StreamRequest(80, 2, warm_context=90),
+    ])
+    hw2 = make_hardware(16, "M", tensor_parallel=2)
+    hw2 = hw2.replace(layout=("WS", "OS"))
+    ro = rollout(stream, get_scheduler("orca"))
+    obj = GoodputUnderSLO(ttft_slo_s=1e9, tpot_slo_s=1e9)
+    cfg2 = GAConfig(population=8, generations=2, seed=0)
+    for mode in ("fixed_point", "joint"):
+        outs = [
+            search_mapping(spec_ga, ro.batches, hw2,
+                           [2] * len(ro.batches), cfg2, objective=obj,
+                           n_blocks=1, stream_rollout=ro, co_search=mode,
+                           devices=d)
+            for d in (1, 8)
+        ]
+        assert outs[0].score == outs[1].score, f"{mode} score drifted"
+        assert outs[0].round_scores == outs[1].round_scores
+        assert np.array_equal(outs[0].batch_latencies,
+                              outs[1].batch_latencies)
+
+    print("PARITY-OK")
+
+
+if __name__ == "__main__":
+    main()

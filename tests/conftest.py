@@ -4,8 +4,13 @@ import time
 
 import pytest
 
-# keep smoke tests on 1 device — only the dry-run uses 512 fake devices
-os.environ.pop("XLA_FLAGS", None)
+# keep smoke tests on 1 device — only the dry-run uses 512 fake devices.
+# REPRO_KEEP_XLA_FLAGS=1 preserves XLA_FLAGS: the sharded CI job forces
+# --xla_force_host_platform_device_count=8 and runs the WHOLE suite on the
+# multi-device evaluators (devices=None defaults to all local devices), so
+# every golden-score test doubles as a sharding parity check.
+if not os.environ.get("REPRO_KEEP_XLA_FLAGS"):
+    os.environ.pop("XLA_FLAGS", None)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # ---------------------------------------------------------------------------
