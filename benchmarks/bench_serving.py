@@ -20,7 +20,17 @@ evaluators is itself a device sync, so the ``Timer`` exits only after all
 device work has drained (same guarantee ``common.sync`` gives the raw
 population-pass benchmarks). The final record embeds
 ``repro.core.cache_stats()`` so cache behaviour across the run is
-auditable next to the wall-clock numbers."""
+auditable next to the wall-clock numbers.
+
+``--measured`` adds the sim-to-real section: the *real* async paged
+service (``repro.serving.service``) runs the golden parity stream under
+every scheduler, once on the deterministic iteration clock (where
+measured-vs-planned TTFT/TPOT deltas must be exactly zero — the parity
+contract) and once on a wall clock (where the deltas quantify how far
+iteration-priced planning sits from event-time reality).
+``--measured-only`` recomputes just that section and merges it into
+``--out``."""
+import argparse
 import json
 import time
 
@@ -198,7 +208,114 @@ def fixed_point_vs_one_sweep():
     return rec
 
 
-def run(out_path: str = "BENCH_serving.json"):
+def measured_service_record():
+    """Measured-vs-planned on the real serving subsystem (small model,
+    CPU-friendly). For each scheduler:
+
+    * deterministic clock — the service's measured ``StreamRollout`` must
+      equal the planner's bit for bit, so TTFT/TPOT deltas (both priced
+      with the measured per-iteration seconds) are asserted ``== 0``;
+    * wall clock — measured wall-event timings vs the planner's schedule
+      priced with that run's measured per-iteration seconds: the residual
+      is real queueing/transfer time the iteration abstraction hides.
+    """
+    import jax
+    import numpy as np
+    from repro.configs import all_archs
+    from repro.core.streams import rollout
+    from repro.models import init_model
+    from repro.serving import (
+        SCHEDULERS,
+        AsyncLLMService,
+        ServiceConfig,
+        WallClock,
+    )
+    from repro.serving.service import golden_parity_stream, service_requests
+
+    cfg = all_archs()["qwen1.5-0.5b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    stream = golden_parity_stream()
+    svc_cfg = ServiceConfig(max_batch=3, max_len=64, block_len=16)
+
+    def sched(name):
+        return (SCHEDULERS[name](chunk=8) if name == "chunked_prefill"
+                else SCHEDULERS[name]())
+
+    def delta(a, b):
+        d = np.abs(np.asarray(a) - np.asarray(b))
+        d = d[np.isfinite(d)]
+        return {"mean": round(float(d.mean()), 6),
+                "max": round(float(d.max()), 6)} if d.size else None
+
+    recs = {}
+    for name in ("vllm", "orca", "chunked_prefill"):
+        svc = AsyncLLMService(params, cfg, svc_cfg)
+        with Timer() as t_det:
+            res = svc.serve_sync(service_requests(stream, cfg.vocab),
+                                 sched(name), stream_name=stream.name)
+        ro = rollout(stream, sched(name), max_slots=svc_cfg.max_batch,
+                     max_iters=10_000)
+        parity = res.rollout.batches == ro.batches
+        planned = ro.timings(res.iteration_seconds)
+        measured = res.timings()
+        det_ttft = delta(planned.ttft_s, measured.ttft_s)
+        det_tpot = delta(planned.tpot_s, measured.tpot_s)
+        assert parity and det_ttft["max"] == 0 and det_tpot["max"] == 0, \
+            f"parity broken for {name}"
+
+        wall_svc = AsyncLLMService(params, cfg, svc_cfg,
+                                   clock=WallClock(period_s=0.01))
+        with Timer() as t_wall:
+            wres = wall_svc.serve_sync(service_requests(stream, cfg.vocab),
+                                       sched(name), stream_name=stream.name)
+        wall = wres.wall_timings()
+        wall_planned = wres.timings()     # its own schedule, iteration-priced
+        recs[name] = {
+            "parity_bitwise": parity,
+            "iterations": len(res.stats),
+            "deterministic_delta_ttft_s": det_ttft,
+            "deterministic_delta_tpot_s": det_tpot,
+            "wall_iterations": len(wres.stats),
+            "wall_delta_ttft_s": delta(wall.ttft_s, wall_planned.ttft_s),
+            "wall_delta_tpot_s": delta(wall.tpot_s, wall_planned.tpot_s),
+            "wall_makespan_s": round(float(wall.makespan_s), 4),
+            "blocks_peak_used": res.counters["blocks_peak_used"],
+            "transfer_pool_hit_rate": round(
+                res.counters["transfer_pool_hits"]
+                / max(res.counters["transfer_pool_hits"]
+                      + res.counters["transfer_pool_misses"], 1), 3),
+            "wall_s": round((t_det.us + t_wall.us) / 1e6, 2),
+        }
+        print(f"# measured {name:16s} parity={parity} "
+              f"wall_dTTFT={recs[name]['wall_delta_ttft_s']['mean']}s "
+              f"wall_dTPOT={recs[name]['wall_delta_tpot_s']['mean']}s")
+        emit(f"measured_service_{name}", t_det.us + t_wall.us,
+             f"parity={parity}")
+    return {
+        "stream": stream.name,
+        "n_requests": stream.n_requests,
+        "service": {"max_batch": svc_cfg.max_batch,
+                    "max_len": svc_cfg.max_len,
+                    "block_len": svc_cfg.block_len},
+        "schedulers": recs,
+    }
+
+
+def run(out_path: str = "BENCH_serving.json", measured: bool = False,
+        measured_only: bool = False):
+    if measured_only:
+        rec = {}
+        try:
+            with open(out_path) as f:
+                rec = json.load(f)
+        except (OSError, ValueError):
+            pass
+        rec["measured_service"] = measured_service_record()
+        if out_path:
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=2)
+                f.write("\n")
+        return rec
     t0 = time.time()
     frontier = goodput_frontier()
     mix = fixed_point_vs_one_sweep()
@@ -272,6 +389,8 @@ def run(out_path: str = "BENCH_serving.json"):
         "fig10b_edp": edps,
         "cache_stats": cache_stats(),
     }
+    if measured:
+        rec["measured_service"] = measured_service_record()
     if out_path:
         with open(out_path, "w") as f:
             json.dump(rec, f, indent=2)
@@ -280,4 +399,14 @@ def run(out_path: str = "BENCH_serving.json"):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="output JSON path")
+    ap.add_argument("--measured", action="store_true",
+                    help="also run the real async service and record "
+                         "measured-vs-planned TTFT/TPOT deltas")
+    ap.add_argument("--measured-only", action="store_true",
+                    help="recompute only the measured-service section and "
+                         "merge it into --out")
+    args = ap.parse_args()
+    run(args.out, measured=args.measured, measured_only=args.measured_only)

@@ -29,8 +29,13 @@ def cache_stats() -> dict:
     cache sizes incl. the sharded wrappers), ``device_tables``
     (device-buffer cache hits/misses/entries), ``device_resident_bytes``
     (per-device bytes of the cached stacked buffers) plus its total.
-    Degrades to the host-side stats alone when JAX is unavailable."""
+    Degrades to the host-side stats alone when JAX is unavailable.
+    Also carries a ``serving`` section: the process-wide serving engine /
+    paged-cache counters (iterations, block residency, OOM/blocked
+    admissions, transfer-pool hit rates)."""
     out: dict = {"cost_tables": timing.cost_cache_stats()}
+    from ..serving import stats as serving_stats
+    out["serving"] = serving_stats.snapshot()
     try:
         from . import jax_evaluator
     except Exception:                           # pragma: no cover - no jax

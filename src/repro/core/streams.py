@@ -82,7 +82,10 @@ class RequestStream:
     @classmethod
     def from_requests(cls, requests: Sequence[StreamRequest],
                       name: str = "explicit") -> "RequestStream":
-        return cls(name=name, requests=tuple(requests))
+        # n_requests would otherwise keep its distribution-mode default and
+        # misreport the explicit list's length
+        return cls(name=name, requests=tuple(requests),
+                   n_requests=len(requests))
 
     @classmethod
     def fixed_batches(cls, batches: Sequence[Sequence[Request]],

@@ -1,0 +1,158 @@
+"""Block-table-indexed serving paths over a paged KV block pool.
+
+The dense serving cache is one ``[max_batch, max_len, ...]`` array per
+layer; a request owns a whole row whether it uses 3 tokens of it or all of
+them. The paged layout replaces the row with a *block pool*
+``[num_blocks, block_len, ...]`` plus a per-request *block table* — the
+vLLM/SHARK residency model — so the memory a request pins is proportional
+to its context, and "can we admit one more warm decode" becomes a
+free-list question instead of an assumption.
+
+Index conventions (shared with ``repro.serving.paged_cache``):
+
+* block 0 is the reserved **null block**: block tables are padded with it,
+  and any write that falls outside a request's allocated span is routed to
+  it. Its contents are garbage by design — every attention path masks by
+  ``len``, so garbage past the live context is never read (same invariant
+  that lets the dense engine skip zero-on-admit).
+* mamba / conv recurrent state has no sequence axis, so it stays
+  slot-indexed: arrays carry ``max_batch + 1`` rows and the extra last row
+  is the **scratch slot** used by batch-padding lanes.
+
+The compute paths below *gather* a request batch's blocks into the dense
+layout, run the unmodified ``decode_step`` / ``extend`` model functions,
+and scatter the touched positions back through the block table — so paged
+execution is bit-identical in its unmasked reads to the dense engine, which
+is exactly the parity the serving tests pin down.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import init_attn_cache
+from .mamba2 import init_mamba_cache
+from .transformer import ModelConfig, decode_step, extend
+
+NULL_BLOCK = 0
+
+
+def is_slot_layer(layer: dict) -> bool:
+    """Recurrent (mamba) layers keep per-slot state; attention layers page."""
+    return "state" in layer
+
+
+def init_paged_pools(cfg: ModelConfig, max_batch: int, num_blocks: int,
+                     block_len: int, dtype=jnp.float32):
+    """Per-layer pools: attention layers get ``[num_blocks, block_len, ...]``
+    KV pools (reusing the dense cache constructor with the pool shape);
+    recurrent layers get slot state with one extra scratch row."""
+    pools = []
+    for i in range(cfg.n_layers):
+        if cfg.mixer_kind(i) == "attn":
+            c = init_attn_cache(cfg, num_blocks, block_len, dtype)
+        else:
+            c = init_mamba_cache(cfg, max_batch + 1)
+        c.pop("len")            # lengths live host-side, per slot
+        pools.append(c)
+    return pools
+
+
+def gather_paged_cache(pools, tables, lens, slots):
+    """Assemble the dense per-request cache view a model function expects.
+
+    ``tables``: [N, T] int32 block ids; ``lens``: [N] live context lengths;
+    ``slots``: [N] slot ids for the recurrent state rows. Returns a cache
+    list in the dense engine layout ([N, T*block_len, ...] per attention
+    layer) — positions past ``lens`` hold whatever the referenced blocks
+    hold (the null block included) and rely on length masking downstream.
+    """
+    n, t = tables.shape
+    cache = []
+    for layer in pools:
+        if is_slot_layer(layer):
+            d = {k: v[slots] for k, v in layer.items()}
+        else:
+            d = {}
+            for k, pool in layer.items():
+                g = pool[tables]                       # [N, T, bl, ...]
+                d[k] = g.reshape((n, t * pool.shape[1]) + pool.shape[2:])
+        d["len"] = lens
+        cache.append(d)
+    return cache
+
+
+def paged_decode(params, cfg: ModelConfig, tokens, pools, tables, lens,
+                 slots, block_len: int, impl: str = "xla"):
+    """One decode step for a batch of paged requests.
+
+    Gathers each request's blocks into the dense layout, runs the stock
+    ``decode_step``, then scatters exactly one written KV position per
+    request back through its block table (position ``lens[j]`` lands in
+    block ``tables[j, lens[j] // block_len]``). Padding lanes must use the
+    null block table and the scratch slot so their writes are sunk.
+    Returns ``(argmax tokens [N], new pools)``.
+    """
+    cache = gather_paged_cache(pools, tables, lens, slots)
+    logits, new_cache = decode_step(params, cfg, tokens, cache, impl=impl)
+    n = tokens.shape[0]
+    bidx = jnp.take_along_axis(tables, (lens // block_len)[:, None],
+                               axis=1)[:, 0]           # [N] target blocks
+    off = lens % block_len
+    new_pools = []
+    for layer, new in zip(pools, new_cache):
+        if is_slot_layer(layer):
+            new_pools.append(
+                {k: layer[k].at[slots].set(new[k]) for k in layer})
+            continue
+        d = {}
+        for k, pool in layer.items():
+            arr = new[k]                               # dense [N, S, ...]
+            idx = lens.reshape((n,) + (1,) * (arr.ndim - 1))
+            upd = jnp.take_along_axis(arr, idx, axis=1)[:, 0]
+            d[k] = pool.at[bidx, off].set(upd.astype(pool.dtype))
+        new_pools.append(d)
+    return jnp.argmax(logits, -1), new_pools
+
+
+def paged_extend(params, cfg: ModelConfig, tokens, pools, table, off, slot,
+                 length, block_len: int, impl: str = "xla"):
+    """One (possibly chunked/padded) prefill chunk for a single request.
+
+    ``tokens``: [C] right-padded chunk; ``table``: [T] the request's block
+    table; ``off``: current context length (write offset); ``length``: true
+    chunk length. Runs the stock ``extend`` over the gathered dense row,
+    then scatters back the whole-block window covering [off, off+C) — the
+    blocks are request-owned so rewriting untouched leading/trailing
+    positions in the window is a no-op, and window blocks past the table
+    (or past the allocated span) are routed to the null block.
+    Returns ``(argmax token, new pools)``.
+    """
+    c = tokens.shape[0]
+    t = table.shape[0]
+    w = (c + block_len - 1) // block_len + 1           # window, static
+    lens1 = jnp.reshape(off, (1,))
+    slots1 = jnp.reshape(slot, (1,))
+    cache = gather_paged_cache(pools, table[None], lens1, slots1)
+    logits, new_cache = extend(params, cfg, tokens[None], cache, impl=impl,
+                               length=length)
+    w0 = off // block_len
+    widx = w0 + jnp.arange(w)
+    safe = jnp.where(widx < t, table[jnp.minimum(widx, t - 1)], NULL_BLOCK)
+    new_pools = []
+    for layer, new in zip(pools, new_cache):
+        if is_slot_layer(layer):
+            new_pools.append(
+                {k: layer[k].at[slot].set(new[k][0]) for k in layer})
+            continue
+        d = {}
+        for k, pool in layer.items():
+            row = new[k][0]                            # [S, ...]
+            pad = [(0, w * block_len)] + [(0, 0)] * (row.ndim - 1)
+            row = jnp.pad(row, pad)
+            win = jax.lax.dynamic_slice_in_dim(row, w0 * block_len,
+                                               w * block_len, axis=0)
+            win = win.reshape((w, block_len) + row.shape[1:])
+            d[k] = pool.at[safe].set(win.astype(pool.dtype))
+        new_pools.append(d)
+    return jnp.argmax(logits, -1)[0], new_pools

@@ -10,9 +10,15 @@ from .scheduler import (  # noqa: F401
     plan_rollout,
 )
 
-# ``ServingEngine`` pulls in jax + the model stack; the DSE layer only needs
-# the (pure-python) schedulers, so the engine is loaded lazily (PEP 562).
-_ENGINE_EXPORTS = ("ServingEngine", "summarize", "IterationStats")
+# ``ServingEngine`` / the async service pull in jax + the model stack; the
+# DSE layer only needs the (pure-python) schedulers, so the heavy modules
+# are loaded lazily (PEP 562).
+_ENGINE_EXPORTS = ("ServingEngine", "summarize", "IterationStats",
+                   "RunResult")
+_SERVICE_EXPORTS = ("AsyncLLMService", "ServiceConfig", "ServiceResult",
+                    "golden_parity_stream", "service_requests")
+_CLOCK_EXPORTS = ("IterationClock", "WallClock")
+_CACHE_EXPORTS = ("BlockAllocator", "PagedKVCache", "TransferBufferPool")
 
 
 def __getattr__(name):
@@ -20,4 +26,16 @@ def __getattr__(name):
         from . import engine
 
         return getattr(engine, name)
+    if name in _SERVICE_EXPORTS:
+        from . import service
+
+        return getattr(service, name)
+    if name in _CLOCK_EXPORTS:
+        from . import clock
+
+        return getattr(clock, name)
+    if name in _CACHE_EXPORTS:
+        from . import paged_cache
+
+        return getattr(paged_cache, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

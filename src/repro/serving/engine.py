@@ -10,7 +10,8 @@ the DSE layer models.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, field
 from functools import partial
 
 import jax
@@ -18,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.transformer import ModelConfig, decode_step, extend, init_cache
+from . import stats as serving_stats
 from .scheduler import (
     Scheduler,
     ServeRequest,
@@ -34,6 +36,30 @@ class IterationStats:
     n_prefill_tokens: int
     n_decode: int
     seconds: float
+    # occupancy / pressure gauges (0 where a backend has no such notion)
+    queue_depth: int = 0        # requests admitted but not yet scheduled
+    slots_used: int = 0         # batch slots occupied after the iteration
+    blocks_used: int = 0        # KV blocks resident (paged service only)
+    blocked_admissions: int = 0  # admissions refused for lack of blocks
+    preempts: int = 0
+    evictions: int = 0
+
+
+@dataclass
+class RunResult:
+    """``ServingEngine.run`` outcome. Unpacks like the historical
+    ``(finished, stats)`` tuple; additionally carries the requests still in
+    flight when the iteration budget ran out (previously dropped silently).
+    """
+
+    finished: list[ServeRequest]
+    stats: list[IterationStats]
+    unfinished: list[ServeRequest] = field(default_factory=list)
+    truncated: bool = False
+
+    def __iter__(self):
+        yield self.finished
+        yield self.stats
 
 
 class ServingEngine:
@@ -101,9 +127,11 @@ class ServingEngine:
         running: list[ServeRequest] = []
         finished: list[ServeRequest] = []
         stats: list[IterationStats] = []
+        serving_stats.bump("engine_runs")
         it = 0
         while (pending or waiting or running) and it < max_iters:
             admit_arrivals(pending, waiting, running, self.free, it)
+            queue_depth = len(waiting)
             plan = scheduler.plan(waiting, running, len(self.free))
             t0 = time.perf_counter()
             n_prefill_tok = 0
@@ -145,27 +173,67 @@ class ServingEngine:
 
             stats.append(IterationStats(
                 it, n_prefill_tok, len(plan.decode),
-                time.perf_counter() - t0))
+                time.perf_counter() - t0,
+                queue_depth=queue_depth,
+                slots_used=self.max_batch - len(self.free)))
+            serving_stats.bump("iterations")
+            serving_stats.bump("prefill_tokens", n_prefill_tok)
+            serving_stats.bump("decode_tokens", len(plan.decode))
+            serving_stats.high_water("peak_slots_used",
+                                     self.max_batch - len(self.free))
+            serving_stats.high_water("peak_queue_depth", queue_depth)
             it += 1
-        return finished, stats
+
+        unfinished = pending + waiting + running
+        if unfinished:
+            serving_stats.bump("truncated_runs")
+            serving_stats.bump("unfinished_requests", len(unfinished))
+            warnings.warn(
+                f"engine run truncated at max_iters={max_iters} with "
+                f"{len(unfinished)} request(s) still in flight — they are "
+                "reported in RunResult.unfinished, not silently dropped",
+                stacklevel=2)
+        return RunResult(finished, stats, unfinished=unfinished,
+                         truncated=bool(unfinished))
 
     def _reset_slot(self, slot: int):
-        def zero(c):
-            return c.at[slot].set(jnp.zeros_like(c[slot]))
+        """Reset a slot for a fresh request: live length to zero plus the
+        (tiny) recurrent state rows. KV contents are deliberately left
+        stale — every attention path masks reads by ``len``, so zeroing
+        [max_len, heads, dim] per layer on every admission bought nothing
+        but a full-cache write."""
+        new_cache = []
+        for layer in self.cache:
+            d = dict(layer)
+            d["len"] = layer["len"].at[slot].set(0)
+            if "state" in layer:
+                d["state"] = layer["state"].at[slot].set(
+                    jnp.zeros_like(layer["state"][slot]))
+            new_cache.append(d)
+        self.cache = new_cache
 
-        self.cache = jax.tree.map(zero, self.cache)
 
-
-def summarize(finished: list[ServeRequest], stats: list[IterationStats]):
+def summarize(finished: list[ServeRequest], stats: list[IterationStats],
+              unfinished: list[ServeRequest] | None = None):
     total_s = sum(s.seconds for s in stats)
     out_toks = sum(len(r.generated) for r in finished)
     ttft = [r.first_token_iter - r.arrived_iter for r in finished
             if r.first_token_iter is not None]
+    n_it = len(stats)
     return {
         "requests": len(finished),
-        "iterations": len(stats),
+        "unfinished": len(unfinished) if unfinished is not None else 0,
+        "iterations": n_it,
         "output_tokens": out_toks,
         "total_seconds": total_s,
         "tokens_per_second": out_toks / total_s if total_s else 0.0,
         "mean_ttft_iters": float(np.mean(ttft)) if ttft else 0.0,
+        "mean_queue_depth": float(np.mean([s.queue_depth for s in stats]))
+        if n_it else 0.0,
+        "mean_slots_used": float(np.mean([s.slots_used for s in stats]))
+        if n_it else 0.0,
+        "peak_blocks_used": max((s.blocks_used for s in stats), default=0),
+        "blocked_admissions": sum(s.blocked_admissions for s in stats),
+        "preempts": sum(s.preempts for s in stats),
+        "evictions": sum(s.evictions for s in stats),
     }

@@ -1,0 +1,159 @@
+"""Paged KV residency invariants: allocator ownership/conservation,
+gather-vs-dense bitwise equality, admission at exhaustion, buffer pooling.
+
+Property tests run under the offline hypothesis shim (keyword scalar
+strategies; sequences are derived from drawn seeds)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.paged_cache import (
+    BlockAllocator,
+    PagedKVCache,
+    TransferBufferPool,
+)
+
+
+def _check_invariants(alloc: BlockAllocator):
+    """No double ownership, no null-block ownership, exact free-list
+    conservation: owned + free == {1..num_blocks-1}."""
+    owned = []
+    for blocks in alloc.owners().values():
+        owned.extend(blocks)
+    assert len(owned) == len(set(owned)), "block owned twice"
+    assert 0 not in owned, "null block handed out"
+    assert set(owned) | set(alloc._free) == set(range(1, alloc.num_blocks))
+    assert len(owned) + alloc.blocks_free == alloc.capacity
+
+
+@given(seed=st.integers(0, 10_000), num_blocks=st.integers(2, 40),
+       block_len=st.integers(1, 32))
+@settings(max_examples=40, deadline=None)
+def test_allocator_random_walk_invariants(seed, num_blocks, block_len):
+    """Arbitrary interleavings of reserve/free keep every block owned by at
+    most one request and conserve the free list exactly."""
+    rng = np.random.default_rng(seed)
+    alloc = BlockAllocator(num_blocks, block_len)
+    live: list[int] = []
+    next_rid = 0
+    for _ in range(60):
+        if live and (rng.random() < 0.4 or alloc.blocks_free == 0):
+            rid = live.pop(int(rng.integers(len(live))))
+            alloc.free(rid)
+        else:
+            demand = int(rng.integers(0, 3 * block_len + 1))
+            could = alloc.can_reserve(demand)
+            ok = alloc.reserve(next_rid, demand)
+            assert ok == could
+            if ok:
+                assert len(alloc.table(next_rid)) == alloc.blocks_for(demand)
+                live.append(next_rid)
+            next_rid += 1
+        _check_invariants(alloc)
+    for rid in live:
+        alloc.free(rid)
+    assert alloc.blocks_free == alloc.capacity
+
+
+@given(num_blocks=st.integers(2, 30), block_len=st.integers(1, 16),
+       demand=st.integers(1, 200))
+@settings(max_examples=40, deadline=None)
+def test_admission_blocks_at_exhaustion(num_blocks, block_len, demand):
+    """When the free list cannot cover the demand, reserve() refuses (an
+    OOM event) and mutates nothing; it succeeds verbatim after space is
+    freed."""
+    alloc = BlockAllocator(num_blocks, block_len)
+    need = alloc.blocks_for(demand)
+    filler = []
+    rid = 0
+    while alloc.blocks_free >= need:      # fill until demand can't fit
+        assert alloc.reserve(rid, block_len)
+        filler.append(rid)
+        rid += 1
+    before_free = alloc.blocks_free
+    before_oom = alloc.oom_events
+    assert not alloc.can_reserve(demand)
+    assert alloc.reserve(999, demand) is False
+    assert alloc.oom_events == before_oom + 1
+    assert alloc.blocks_free == before_free
+    assert 999 not in alloc.owners()
+    _check_invariants(alloc)
+    freed = 0
+    while freed < need and filler:        # free just enough, retry
+        freed += alloc.free(filler.pop())
+    if freed >= need:
+        assert alloc.reserve(999, demand) is True
+        _check_invariants(alloc)
+
+
+def test_allocator_rejects_double_reserve_and_null_config():
+    alloc = BlockAllocator(8, 4)
+    assert alloc.reserve(1, 4)
+    with pytest.raises(ValueError, match="already holds"):
+        alloc.reserve(1, 4)
+    with pytest.raises(ValueError):
+        BlockAllocator(1, 4)              # only the null block: unusable
+    with pytest.raises(ValueError):
+        BlockAllocator(8, 0)
+
+
+@given(seed=st.integers(0, 10_000), block_len=st.sampled_from([1, 2, 4, 8]),
+       t=st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_gather_matches_dense_slicing_bitwise(seed, block_len, t):
+    """Gathering a request's blocks reproduces the dense cache row
+    *bitwise* — the exactness the parity contract stands on. Pools here are
+    synthetic numpy payloads; no model involved."""
+    from repro.models.paged import gather_paged_cache
+    rng = np.random.default_rng(seed)
+    num_blocks, heads, dim, n = 12, 2, 3, 2
+    pool = rng.standard_normal((num_blocks, block_len, heads, dim))
+    pool = np.asarray(pool, np.float32)
+    tables = rng.integers(0, num_blocks, size=(n, t)).astype(np.int32)
+    lens = rng.integers(0, t * block_len + 1, size=(n,)).astype(np.int32)
+    slots = np.zeros((n,), np.int32)
+    [out] = gather_paged_cache([{"k": pool}], tables, lens, slots)
+    dense = np.stack([
+        np.concatenate([pool[b] for b in tables[j]], axis=0)
+        for j in range(n)])
+    assert np.array_equal(np.asarray(out["k"]), dense)
+    assert np.array_equal(np.asarray(out["len"]), lens)
+
+
+def test_transfer_buffer_pool_reuse_and_bound():
+    pool = TransferBufferPool(capacity=2)
+    a = pool.acquire((4,), np.int32)
+    b = pool.acquire((4,), np.int32)
+    assert pool.misses == 2 and pool.hits == 0
+    assert a is not b
+    pool.release(a)
+    c = pool.acquire((4,), np.int32)
+    assert c is a and pool.hits == 1
+    assert pool.acquire((4, 2), np.int32).shape == (4, 2)  # distinct key
+    # capacity bound: a third release of the same key is dropped
+    x, y, z = (np.empty((4,), np.int32) for _ in range(3))
+    for buf in (x, y, z):
+        pool.release(buf)
+    assert len(pool._pools[((4,), np.dtype(np.int32).str)]) == 2
+
+
+def test_paged_kv_cache_validates_and_binds():
+    pytest.importorskip("jax")
+    from repro.configs import all_archs
+    cfg = all_archs()["qwen1.5-0.5b"].reduced()
+    with pytest.raises(ValueError, match="multiple of block_len"):
+        PagedKVCache(cfg, max_batch=2, max_len=50, block_len=16)
+    kv = PagedKVCache(cfg, max_batch=2, max_len=64, block_len=16)
+    assert kv.blocks_per_seq == 4
+    assert kv.allocator.capacity == 2 * 4          # full residency default
+    assert kv.capacity_tokens() == 128
+    assert kv.allocator.reserve(7, 33)             # 3 blocks
+    kv.bind(0, 7)
+    row = kv.tables_np[0]
+    assert (row[:3] > 0).all() and (row[3:] == 0).all()
+    assert kv.lens_np[0] == 0
+    kv.release(0, 7)
+    assert (kv.tables_np[0] == 0).all()
+    assert kv.allocator.blocks_free == kv.allocator.capacity
+    assert kv.resident_bytes() > 0

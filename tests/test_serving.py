@@ -161,3 +161,53 @@ def test_engine_rejects_warm_requests():
     warm = ServeRequest(0, [1] * 8, 4, prefilled=8)
     with pytest.raises(ValueError, match="warm"):
         eng.run([warm], OrcaScheduler())
+
+
+def test_run_reports_unfinished_on_truncation():
+    """max_iters exhaustion used to silently drop in-flight requests; now
+    they come back in RunResult.unfinished (and tuple unpacking still
+    works)."""
+    rng = np.random.default_rng(7)
+    eng = ServingEngine(PARAMS, CFG, max_batch=2, max_len=64)
+    reqs = _requests(4, rng)
+    with pytest.warns(UserWarning, match="truncated"):
+        res = eng.run(reqs, VLLMScheduler(), max_iters=2)
+    fin, stats = res                      # historical 2-tuple protocol
+    assert fin is res.finished and stats is res.stats
+    assert res.truncated and res.unfinished
+    assert len(res.finished) + len(res.unfinished) == 4
+    s = summarize(res.finished, res.stats, unfinished=res.unfinished)
+    assert s["unfinished"] == len(res.unfinished)
+
+
+def test_reset_slot_leaves_kv_stale_but_masked():
+    """Slot reset clears only the live length (and recurrent state) — the
+    KV contents stay stale, and length masking must make that invisible:
+    tokens from a poisoned cache equal tokens from a fresh one."""
+    prompts = [np.random.default_rng(11).integers(
+        0, CFG.vocab, size=9).tolist() for _ in range(2)]
+
+    def run(poison):
+        eng = ServingEngine(PARAMS, CFG, max_batch=2, max_len=64)
+        if poison:
+            eng.cache = [
+                {k: (v if k == "len" else
+                     jnp.full_like(v, 7.7e4 if v.dtype.kind == "f" else 3))
+                 for k, v in layer.items()}
+                for layer in eng.cache]
+        reqs = [ServeRequest(i, list(p), 4) for i, p in enumerate(prompts)]
+        fin, _ = eng.run(reqs, VLLMScheduler())
+        return {r.rid: r.generated for r in fin}
+
+    assert run(poison=True) == run(poison=False)
+
+
+def test_iteration_stats_carry_occupancy():
+    rng = np.random.default_rng(12)
+    eng = ServingEngine(PARAMS, CFG, max_batch=2, max_len=64)
+    fin, stats = eng.run(_requests(4, rng), OrcaScheduler())
+    assert len(fin) == 4
+    assert any(s.slots_used == 2 for s in stats)
+    assert any(s.queue_depth > 0 for s in stats)
+    s = summarize(fin, stats)
+    assert s["mean_slots_used"] > 0 and s["unfinished"] == 0
