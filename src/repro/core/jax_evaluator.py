@@ -15,13 +15,18 @@ evaluated in one jitted call, structured as:
 * **timing pass B** (per batch x individual): the only truly sequential
   part — the makespan recurrence — delegated to a pluggable
   :mod:`repro.core.timing` backend: ``dense`` (batched ``lax.scan``, the
-  XLA default) or ``pallas`` (``repro.kernels.mapping_eval``, the
+  XLA default), ``pallas`` (``repro.kernels.mapping_eval``, the
   VMEM-resident TPU kernel over a (batches, population) grid; interpreted
-  on CPU when asked). Both consume the same padded predecessor-position
-  layout the structural pass emits, and both return the full timing
-  matrix (per-op end times + per-chiplet free times), which
-  ``GroupPopulationEvaluator`` folds into per-request timings for the
-  SLO-aware GA objectives.
+  on CPU when asked), or ``fused`` (``repro.kernels.mapping_eval_fused``,
+  the pass-A + pass-B megakernel: the per-step ``T_proc`` gather happens
+  *inside* the kernel via the structural pass's ``sched_idx``, so the
+  (B, P, T) ``tproc_sched`` tensor is never materialised in HBM; off-TPU
+  and un-interpreted it routes to the fused single-program XLA path,
+  counted as a ``fused->host`` reroute in ``timing_backend_stats()``).
+  All consume the same padded predecessor-position layout the structural
+  pass emits, and all return the full timing matrix (per-op end times +
+  per-chiplet free times), which ``GroupPopulationEvaluator`` folds into
+  per-request timings for the SLO-aware GA objectives.
 
 Semantics match ``evaluator.evaluate`` exactly (tested to 1e-6).
 
@@ -72,7 +77,9 @@ from .hardware import (
     E_NOP_PJ_PER_BYTE_HOP,
     HardwareConfig,
 )
+from ..kernels.mapping_eval import default_grid_order
 from .timing import (
+    FusedTimingBackend,
     OracleTimingBackend,
     PallasTimingBackend,
     TimingBackend,
@@ -81,6 +88,8 @@ from .timing import (
     dense_pass_b,
     fold_request_timings,
     padded_predecessor_columns,
+    record_backend_dispatch,
+    record_backend_fallback,
     resolve_timing_backend,
 )
 from .workload import ExecutionGraph
@@ -145,16 +154,24 @@ def _structural_pass(order, lc, n_succ, hops, pred_cols, pred_valid,
     ppos = jnp.where(pred_valid[l_seq],                   # (T, W)
                      ppos_mat[b_seq, l_seq], T)
 
+    # flat (rows*M) gather index of schedule step t into the row-major
+    # cost tables — the fused megakernel's in-kernel pass-A index, and the
+    # host-side tproc_sched gather index for the other backends
+    sched_idx = (b_seq * m_cols + l_seq).astype(jnp.int32)  # (T,)
+
     return dict(chip_seq=chip_seq, elide=elide, write_out=write_out,
                 nop_mask=nop_mask, hop_mask=hop_mask, dram_mask=dram_mask,
-                b_seq=b_seq, l_seq=l_seq, ppos=ppos)
+                b_seq=b_seq, l_seq=l_seq, ppos=ppos, sched_idx=sched_idx)
 
 
 def _cost_pass(struct, lc, pred_cols, dram_hops, flow_of_chip, ws_resident,
                out_bytes, comp_s, comp_e, weight_b, psum_b, output_b, rr,
                stream_b, extra_w, dram_bw, nop_bw):
-    """Per-op ``T_proc`` (in scheduled order) + total energy for one
-    (batch, individual) pair given the individual's structural pass."""
+    """Per-op ``T_proc`` in *table* order (rows, M) + total energy for one
+    (batch, individual) pair given the individual's structural pass. The
+    schedule-order gather (pass A) is left to the timing stage: the dense
+    and unfused-pallas backends gather on the host side of the kernel via
+    ``struct["sched_idx"]``, the fused megakernel gathers in-kernel."""
     rows, m_cols = lc.shape
     ws_idx = DATAFLOWS.index("WS")
 
@@ -188,19 +205,44 @@ def _cost_pass(struct, lc, pred_cols, dram_hops, flow_of_chip, ws_resident,
         * E_NOP_PJ_PER_BYTE_HOP
     energy_pj = jnp.sum(cene) + e_dram + e_nop
 
-    tproc_sched = t_proc[struct["b_seq"], struct["l_seq"]]  # (T,)
-    return tproc_sched, energy_pj
+    return t_proc, energy_pj                              # (rows, M)
 
 
-def _pass_b(tproc, chip_seq, ppos, n_chips: int, backend: str,
-            interpret: bool):
-    """Backend-dispatched timing recurrence: tproc (B, P, T), chip_seq
-    (P, T), ppos (P, T, W) -> (end (B, P, T), chip_free (B, P, C))."""
+def _gather_sched(tproc_flat, sched_idx):
+    """Pass A as an XLA gather: flat cost rows (B, P, L) + per-individual
+    schedule index (P, T) -> scheduled ``T_proc`` (B, P, T). Bitwise the
+    old ``t_proc[b_seq, l_seq]`` gather (same elements, same dtype)."""
+    nb, pop, _ = tproc_flat.shape
+    idx = jnp.broadcast_to(sched_idx[None],
+                           (nb, pop, sched_idx.shape[-1]))
+    return jnp.take_along_axis(tproc_flat, idx, axis=-1)
+
+
+def _pass_ab(tproc_flat, sched_idx, chip_seq, ppos, n_chips: int,
+             backend: str, interpret: bool, grid_order: str):
+    """Backend-dispatched pass A (gather) + pass B (timing recurrence):
+    tproc_flat (B, P, L=rows*M), sched_idx (P, T), chip_seq (P, T),
+    ppos (P, T, W) -> (end (B, P, T), chip_free (B, P, C)).
+
+    ``fused`` hands the un-gathered rows straight to the megakernel (the
+    (B, P, T) tproc_sched never exists outside VMEM); every other backend
+    gathers here and the stages fuse — or not — at XLA's discretion.
+    ``fused_host`` is the off-TPU route of the fused backend: one fused
+    XLA program, bitwise-identical to ``dense`` by construction (float max
+    is exact, one add per step in identical order)."""
+    if backend == "fused":
+        from ..kernels.mapping_eval import mapping_eval_fused
+
+        return mapping_eval_fused(tproc_flat, sched_idx, chip_seq, ppos,
+                                  n_chips, grid_order=grid_order,
+                                  interpret=interpret)
+    tproc = _gather_sched(tproc_flat, sched_idx)
     if backend == "pallas":
         from ..kernels.mapping_eval import mapping_eval
 
         return mapping_eval(tproc, chip_seq, ppos, n_chips,
                             interpret=interpret)
+    # dense and fused_host: the proven batched-scan formulation
     per_p = jax.vmap(lambda tp, c, pp: dense_pass_b(tp, c, pp, n_chips))
     return jax.vmap(lambda tp: per_p(tp, chip_seq, ppos))(tproc)
 
@@ -230,6 +272,7 @@ def _population_pass_impl(
     backend: str = "dense",
     interpret: bool = False,
     full: bool = False,
+    grid_order: str = "batch_major",
 ):
     struct = jax.vmap(
         lambda o, lc: _structural_pass(o, lc, n_succ, hops, pred_cols,
@@ -240,17 +283,21 @@ def _population_pass_impl(
                                  ws_resident, out_bytes, comp_s, comp_e,
                                  weight_b, psum_b, output_b, rr, stream_b,
                                  extra_w, dram_bw, nop_bw)
-    )(struct, l2c)                                        # (P, T), (P,)
-    end, free = _pass_b(tproc[None], struct["chip_seq"], struct["ppos"],
-                        n_chips, backend, interpret)
+    )(struct, l2c)                                # (P, rows, M), (P,)
+    tproc_flat = tproc.reshape(tproc.shape[0], -1)[None]  # (1, P, L)
+    end, free = _pass_ab(tproc_flat, struct["sched_idx"],
+                         struct["chip_seq"], struct["ppos"],
+                         n_chips, backend, interpret, grid_order)
     lat = jnp.max(end[0], axis=-1)
     if full:        # the O(P*T) matrices leave the device only on request
-        return lat, energy, end[0], free[0], tproc
+        tproc_sched = _gather_sched(tproc_flat, struct["sched_idx"])[0]
+        return lat, energy, end[0], free[0], tproc_sched
     return lat, energy
 
 
 _population_pass = partial(
-    jax.jit, static_argnames=("n_chips", "backend", "interpret", "full"))(
+    jax.jit, static_argnames=("n_chips", "backend", "interpret", "full",
+                              "grid_order"))(
     _population_pass_impl)
 
 
@@ -267,6 +314,7 @@ def _grouped_population_pass_impl(
     backend: str = "dense",
     interpret: bool = False,
     full: bool = False,
+    grid_order: str = "batch_major",
 ):
     # structural pass once per individual — shared across the group's
     # batches (it depends on the mapping only, not the byte tables)
@@ -284,17 +332,21 @@ def _grouped_population_pass_impl(
 
     tproc, energy = jax.vmap(per_batch)(
         ws_resident, out_bytes, comp_s, comp_e, weight_b, psum_b, output_b,
-        rr, stream_b, extra_w)                            # (B, P, T), (B, P)
-    end, free = _pass_b(tproc, struct["chip_seq"], struct["ppos"],
-                        n_chips, backend, interpret)
+        rr, stream_b, extra_w)                    # (B, P, rows, M), (B, P)
+    tproc_flat = tproc.reshape(tproc.shape[:2] + (-1,))   # (B, P, L)
+    end, free = _pass_ab(tproc_flat, struct["sched_idx"],
+                         struct["chip_seq"], struct["ppos"],
+                         n_chips, backend, interpret, grid_order)
     lat = jnp.max(end, axis=-1)
     if full:        # the O(B*P*T) matrices leave the device only on request
-        return lat, energy, end, free, tproc
+        tproc_sched = _gather_sched(tproc_flat, struct["sched_idx"])
+        return lat, energy, end, free, tproc_sched
     return lat, energy
 
 
 _grouped_population_pass = partial(
-    jax.jit, static_argnames=("n_chips", "backend", "interpret", "full"))(
+    jax.jit, static_argnames=("n_chips", "backend", "interpret", "full",
+                              "grid_order"))(
     _grouped_population_pass_impl)
 
 
@@ -364,7 +416,16 @@ def pad_population(orders: np.ndarray, l2c: np.ndarray,
     the device count by repeating the last individual. Individuals are
     evaluated independently, so padding is masked out by slicing the
     outputs back to the true population size — it can never contaminate
-    real results. Returns ``(orders, l2c, true_population)``."""
+    real results. Returns ``(orders, l2c, true_population)``.
+
+    Pad-lane audit (locked by tests/test_sharded_eval.py): the ONLY
+    consumers are the two ``_run`` methods, and both slice *every*
+    output — lat/energy AND the full-matrix end/free/tproc five-tuple —
+    back to ``true_population`` before anything reads them, so a padded
+    lane can never win selection or leak into a timing matrix. The
+    pallas/fused kernels need no extra grid padding of their own: their
+    population blocks are size 1, so any population size divides the
+    grid exactly."""
     p = orders.shape[0]
     pad = (-p) % multiple
     if pad:
@@ -379,12 +440,14 @@ _SHARDED_PASS_LOCK = threading.Lock()
 
 
 def _sharded_pass(mesh: "Mesh", grouped: bool, n_chips: int, backend: str,
-                  interpret: bool, full: bool):
+                  interpret: bool, full: bool,
+                  grid_order: str = "batch_major"):
     """``jit(shard_map(...))`` wrapper over the population axis, cached per
     (mesh devices, grouped, statics) for the process lifetime — like the
     unsharded passes, repeated searches on the same shapes never rebuild.
     The statics dict rides along replicated (in_specs ``P()``)."""
-    key = (_mesh_key(mesh), grouped, n_chips, backend, interpret, full)
+    key = (_mesh_key(mesh), grouped, n_chips, backend, interpret, full,
+           grid_order)
     with _SHARDED_PASS_LOCK:
         fn = _SHARDED_PASS_CACHE.get(key)
     if fn is not None:
@@ -393,7 +456,8 @@ def _sharded_pass(mesh: "Mesh", grouped: bool, n_chips: int, backend: str,
 
     def body(order_rc, l2c, static):
         return impl(order_rc, l2c, n_chips=n_chips, backend=backend,
-                    interpret=interpret, full=full, **static)
+                    interpret=interpret, full=full, grid_order=grid_order,
+                    **static)
 
     # population axis: 0 on every output of the flat pass, 1 on the
     # grouped pass's (B, P, ...) outputs
@@ -537,18 +601,29 @@ def device_table_resident_bytes() -> "dict[str, int]":
     return out
 
 
-def _resolve_jax_backend(backend) -> tuple[str, bool]:
-    """(name, interpret) statics for the jitted passes; the oracle backend
-    has no jitted path — compass routes it to the numpy evaluator."""
+def _resolve_jax_backend(backend) -> tuple[str, bool, str]:
+    """(name, interpret, grid_order) statics for the jitted passes; the
+    oracle backend has no jitted path — compass routes it to the numpy
+    evaluator. The fused backend resolves to ``"fused"`` (megakernel) when
+    interpreting or on a TPU, else to ``"fused_host"`` — the fused XLA
+    program, counted as a ``fused->host`` reroute (never silently
+    ``dense``: dispatch stats always name the path that actually ran)."""
     be = resolve_timing_backend(backend)
     if isinstance(be, OracleTimingBackend):
         raise ValueError(
             "the 'oracle' timing backend is the pure-numpy reference path; "
             "use evaluator.evaluate / compass(use_jax=False) instead of the "
             "population evaluators")
+    if isinstance(be, FusedTimingBackend):
+        interpret = bool(be._interpret())
+        grid_order = be.grid_order or default_grid_order()
+        if interpret or jax.default_backend() == "tpu":
+            return "fused", interpret, grid_order
+        record_backend_fallback("fused->host")
+        return "fused_host", False, grid_order
     if isinstance(be, PallasTimingBackend):
-        return "pallas", bool(be._interpret())
-    return "dense", False
+        return "pallas", bool(be._interpret()), "batch_major"
+    return "dense", False, "batch_major"
 
 
 @dataclass
@@ -567,7 +642,8 @@ class PopulationEvaluator:
 
     def __post_init__(self):
         g, hw = self.graph, self.hw
-        self._backend, self._interpret = _resolve_jax_backend(self.backend)
+        self._backend, self._interpret, self._grid_order = \
+            _resolve_jax_backend(self.backend)
         self._mesh = resolve_mesh(self.devices)
         statics = _shared_statics(g, hw)
         if self._mesh is not None:
@@ -580,18 +656,20 @@ class PopulationEvaluator:
         self._order_cache = ScheduledOrderCache(g.rows, g.n_cols)
 
     def _run(self, population, full: bool = False):
+        record_backend_dispatch(self._backend)
         pop = as_stacked(population)
         orders = self._order_cache.orders(pop.segmentation)
         if self._mesh is None:
             return _population_pass(
                 jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
                 n_chips=self._n_chips, backend=self._backend,
-                interpret=self._interpret, full=full, **self._static)
+                interpret=self._interpret, full=full,
+                grid_order=self._grid_order, **self._static)
         orders, l2c, p0 = pad_population(
             np.asarray(orders), np.asarray(pop.layer_to_chip),
             self._mesh.size)
         fn = _sharded_pass(self._mesh, False, self._n_chips, self._backend,
-                           self._interpret, full)
+                           self._interpret, full, self._grid_order)
         out = fn(orders, l2c, self._static)
         if p0 != orders.shape[0]:
             out = tuple(o[:p0] for o in out)
@@ -647,7 +725,8 @@ class GroupPopulationEvaluator:
         assert all([(m.pred_lo, m.pred_hi) for m in g.layers] == preds0
                    for g in self.graphs), \
             "group batches must share predecessor intervals"
-        self._backend, self._interpret = _resolve_jax_backend(self.backend)
+        self._backend, self._interpret, self._grid_order = \
+            _resolve_jax_backend(self.backend)
         self._mesh = resolve_mesh(self.devices)
         stacked = _stacked_device_tables(tuple(self.tables), mesh=self._mesh)
         if len(self.tables) == 1:
@@ -665,18 +744,20 @@ class GroupPopulationEvaluator:
         return len(self.graphs)
 
     def _run(self, population, full: bool = False):
+        record_backend_dispatch(self._backend)
         pop = as_stacked(population)
         orders = self._order_cache.orders(pop.segmentation)
         if self._mesh is None:
             return _grouped_population_pass(
                 jnp.asarray(orders), jnp.asarray(pop.layer_to_chip),
                 n_chips=self._n_chips, backend=self._backend,
-                interpret=self._interpret, full=full, **self._static)
+                interpret=self._interpret, full=full,
+                grid_order=self._grid_order, **self._static)
         orders, l2c, p0 = pad_population(
             np.asarray(orders), np.asarray(pop.layer_to_chip),
             self._mesh.size)
         fn = _sharded_pass(self._mesh, True, self._n_chips, self._backend,
-                           self._interpret, full)
+                           self._interpret, full, self._grid_order)
         out = fn(orders, l2c, self._static)
         if p0 != orders.shape[0]:
             out = tuple(o[:, :p0] for o in out)

@@ -9,7 +9,12 @@ reporting through its own entry point:
   (``jax_evaluator.device_table_cache_stats``) — the heaviest
   host->device uploads, replicated per mesh device under sharding;
 * the host-side execution-graph / cost-table LRUs
-  (``timing.cost_cache_stats``) — rebuild misses dominate BO sweeps.
+  (``timing.cost_cache_stats``) — rebuild misses dominate BO sweeps;
+* the timing-backend dispatch/fallback counters
+  (``timing.timing_backend_stats``) — which pass-B path actually ran
+  (``dense`` / ``pallas`` / ``fused`` / ``fused_host``) and every
+  off-TPU reroute (``pallas->dense`` degradations, ``fused->host``),
+  so a silently-degraded kernel selection is visible, not guessed.
 
 :func:`cache_stats` merges all of them into one JSON-serialisable dict,
 adding per-device resident-buffer bytes so table replication cost is
@@ -32,8 +37,11 @@ def cache_stats() -> dict:
     Degrades to the host-side stats alone when JAX is unavailable.
     Also carries a ``serving`` section: the process-wide serving engine /
     paged-cache counters (iterations, block residency, OOM/blocked
-    admissions, transfer-pool hit rates)."""
-    out: dict = {"cost_tables": timing.cost_cache_stats()}
+    admissions, transfer-pool hit rates) and a ``timing_backend``
+    section: per-backend pass-B dispatch counts plus off-TPU fallback
+    reroutes (``pallas->dense``, ``fused->host``)."""
+    out: dict = {"cost_tables": timing.cost_cache_stats(),
+                 "timing_backend": timing.timing_backend_stats()}
     from ..serving import stats as serving_stats
     out["serving"] = serving_stats.snapshot()
     try:

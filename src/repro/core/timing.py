@@ -22,7 +22,17 @@ of the end vector, the oracle's ``max(..., 0)``):
 * ``pallas`` — ``repro.kernels.mapping_eval``, the VMEM-resident TPU
   kernel (one (batch, individual) recurrence per grid step); off-TPU it
   auto-falls back to ``dense`` unless constructed with ``interpret=True``
-  (CPU CI runs the exact TPU code path interpreted).
+  (CPU CI runs the exact TPU code path interpreted);
+* ``fused``  — ``repro.kernels.mapping_eval_fused``, the pass-A + pass-B
+  megakernel: the tproc gather and the recurrence run in ONE VMEM-resident
+  program (tunable grid order, autotuned per shape on TPU). Off-TPU it
+  routes to ``mapping_eval_fused_host`` — the same fused contract as one
+  jitted XLA program, bitwise-identical to ``dense`` — instead of silently
+  degrading; the reroute is counted in :func:`timing_backend_stats`.
+
+Every ``pass_b`` dispatch and every silent off-TPU reroute is counted in
+:func:`timing_backend_stats` (surfaced via ``repro.core.cache_stats()``),
+so benchmark records can prove which kernel actually ran.
 
 Every backend returns the full **timing matrix** — per-op start/end times
 plus per-chiplet free times — not just a makespan, so
@@ -53,16 +63,62 @@ import numpy as np
 __all__ = [
     "TimingBackend", "TimingMatrix",
     "OracleTimingBackend", "DenseTimingBackend", "PallasTimingBackend",
+    "FusedTimingBackend",
     "TIMING_BACKENDS", "get_timing_backend", "resolve_timing_backend",
     "padded_predecessor_columns", "padded_predecessor_positions",
     "dense_pass_b", "fold_request_timings", "splice_latencies",
     "attribute_group_violations",
     "get_execution_graph", "get_cost_tables", "get_graph_and_tables",
     "cost_cache_stats", "clear_cost_caches",
+    "record_backend_dispatch", "record_backend_fallback",
+    "timing_backend_stats", "clear_timing_backend_stats",
 ]
 
 BACKEND_ENV = "REPRO_TIMING_BACKEND"
-TIMING_BACKENDS = ("oracle", "dense", "pallas")
+TIMING_BACKENDS = ("oracle", "dense", "pallas", "fused")
+
+
+# --------------------------------------------------------------------------
+# Backend dispatch observability
+#
+# Which kernel actually ran is invisible in results (the backends agree
+# bitwise or to float tolerance), so deployment surprises — e.g. 'pallas'
+# silently degrading to 'dense' on a CPU host — would otherwise go
+# unnoticed. Every pass_b dispatch and every implicit reroute bumps a
+# counter here; repro.core.cache_stats() exposes them and the benchmarks
+# embed them next to their wall numbers.
+# --------------------------------------------------------------------------
+
+_BACKEND_STATS_LOCK = threading.Lock()
+_BACKEND_STATS: dict[str, dict[str, int]] = {"dispatches": {}, "fallbacks": {}}
+
+
+def record_backend_dispatch(name: str, n: int = 1) -> None:
+    """Count ``n`` pass-B dispatches attributed to backend ``name``
+    (evaluators call this once per jitted generation call)."""
+    with _BACKEND_STATS_LOCK:
+        d = _BACKEND_STATS["dispatches"]
+        d[name] = d.get(name, 0) + n
+
+
+def record_backend_fallback(kind: str) -> None:
+    """Count one implicit backend reroute, e.g. ``"pallas->dense"`` (the
+    off-TPU degradation) or ``"fused->host"`` (the fused XLA path)."""
+    with _BACKEND_STATS_LOCK:
+        f = _BACKEND_STATS["fallbacks"]
+        f[kind] = f.get(kind, 0) + 1
+
+
+def timing_backend_stats() -> dict:
+    """Snapshot of per-backend dispatch counts and implicit fallbacks."""
+    with _BACKEND_STATS_LOCK:
+        return {k: dict(v) for k, v in _BACKEND_STATS.items()}
+
+
+def clear_timing_backend_stats() -> None:
+    with _BACKEND_STATS_LOCK:
+        for v in _BACKEND_STATS.values():
+            v.clear()
 
 
 # --------------------------------------------------------------------------
@@ -170,6 +226,7 @@ class OracleTimingBackend(TimingBackend):
     name = "oracle"
 
     def pass_b(self, t_proc, chip, ppos, n_chips: int):
+        record_backend_dispatch(self.name)
         t_proc, chip, ppos, _ = _as_bpt(t_proc, chip, ppos)
         n_batch, pop, t_len = t_proc.shape
         end = np.zeros((n_batch, pop, t_len))
@@ -243,6 +300,7 @@ class DenseTimingBackend(TimingBackend):
     def pass_b(self, t_proc, chip, ppos, n_chips: int):
         import jax.numpy as jnp
 
+        record_backend_dispatch(self.name)
         t_proc, chip, ppos, _ = _as_bpt(t_proc, chip, ppos)
         end, free = _dense_batched_fn()(
             jnp.asarray(t_proc, jnp.float32), jnp.asarray(chip),
@@ -273,10 +331,60 @@ class PallasTimingBackend(TimingBackend):
 
         from ..kernels.mapping_eval import mapping_eval
 
+        record_backend_dispatch(self.name)
         t_proc, chip, ppos, _ = _as_bpt(t_proc, chip, ppos)
         end, free = mapping_eval(
             jnp.asarray(t_proc, jnp.float32), jnp.asarray(chip),
             jnp.asarray(ppos), n_chips, interpret=self._interpret())
+        return np.asarray(end), np.asarray(free)
+
+
+class FusedTimingBackend(PallasTimingBackend):
+    """The pass-A + pass-B megakernel
+    (``repro.kernels.mapping_eval_fused``): the tproc gather and the
+    timing recurrence run in one VMEM-resident program on the
+    (population, batches) grid, grid order tunable/autotuned.
+
+    Off-TPU (and not interpreting) it does NOT degrade to ``dense``: it
+    runs ``mapping_eval_fused_host`` — the same fused contract as a single
+    jitted XLA program, bitwise-identical to the dense scan — and counts
+    the reroute as ``"fused->host"`` in :func:`timing_backend_stats`.
+
+    The protocol-level ``pass_b`` receives already-gathered ``t_proc``;
+    the kernel consumes it through an identity ``sched_idx``. The
+    population evaluators instead hand the kernel the un-gathered cost
+    rows (the (B, P, T) ``tproc_sched`` is never materialised there)."""
+
+    name = "fused"
+
+    def __init__(self, interpret: bool | None = None,
+                 grid_order: str | None = None):
+        super().__init__(interpret)
+        self.grid_order = grid_order
+
+    def pass_b(self, t_proc, chip, ppos, n_chips: int):
+        import jax
+        import jax.numpy as jnp
+
+        from ..kernels.mapping_eval import (mapping_eval_fused,
+                                            mapping_eval_fused_host)
+
+        record_backend_dispatch(self.name)
+        t_proc, chip, ppos, _ = _as_bpt(t_proc, chip, ppos)
+        t_len = t_proc.shape[-1]
+        sched = jnp.broadcast_to(jnp.arange(t_len, dtype=jnp.int32),
+                                 chip.shape)
+        interpret = self._interpret()
+        if not interpret and jax.default_backend() != "tpu":
+            record_backend_fallback("fused->host")
+            end, free = mapping_eval_fused_host(
+                jnp.asarray(t_proc, jnp.float32), sched,
+                jnp.asarray(chip), jnp.asarray(ppos), n_chips)
+        else:
+            end, free = mapping_eval_fused(
+                jnp.asarray(t_proc, jnp.float32), sched,
+                jnp.asarray(chip), jnp.asarray(ppos), n_chips,
+                grid_order=self.grid_order, interpret=interpret)
         return np.asarray(end), np.asarray(free)
 
 
@@ -295,6 +403,8 @@ def get_timing_backend(spec: "TimingBackend | str | None" = None
         return DenseTimingBackend()
     if spec == "pallas":
         return PallasTimingBackend(interpret=False)
+    if spec == "fused":
+        return FusedTimingBackend(interpret=False)
     raise ValueError(f"unknown timing backend {spec!r}; choose from "
                      f"{TIMING_BACKENDS} or pass a TimingBackend instance")
 
@@ -302,10 +412,14 @@ def get_timing_backend(spec: "TimingBackend | str | None" = None
 def resolve_timing_backend(spec: "TimingBackend | str | None" = None,
                            ) -> TimingBackend:
     """:func:`get_timing_backend` plus the deployment rule: ``pallas``
-    off-TPU degrades to ``dense`` (with a warning) unless the instance
-    explicitly asked for interpret mode."""
+    off-TPU degrades to ``dense`` (with a warning, counted in
+    :func:`timing_backend_stats`) unless the instance explicitly asked
+    for interpret mode. ``fused`` never degrades — it carries its own
+    off-TPU XLA path (:func:`~repro.kernels.mapping_eval_fused_host`)."""
     be = get_timing_backend(spec)
-    if isinstance(be, PallasTimingBackend) and not be.interpret:
+    if (isinstance(be, PallasTimingBackend)
+            and not isinstance(be, FusedTimingBackend)
+            and not be.interpret):
         import jax
 
         if jax.default_backend() != "tpu":
@@ -314,6 +428,7 @@ def resolve_timing_backend(spec: "TimingBackend | str | None" = None,
                 "PallasTimingBackend(interpret=True) for the interpreted "
                 "CPU path); falling back to 'dense'",
                 RuntimeWarning, stacklevel=2)
+            record_backend_fallback("pallas->dense")
             return DenseTimingBackend()
     return be
 

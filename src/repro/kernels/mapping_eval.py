@@ -30,15 +30,31 @@ SLO-aware GA objectives.
 
 Validated against ``ref.mapping_eval_reference`` (and transitively against
 the numpy evaluation engine, whose timing pass has identical semantics).
+
+``mapping_eval_fused`` additionally fuses pass A — the gather that
+assembles per-step processing times from the un-gathered per-(batch,
+individual) cost row ``t_proc[l]`` via the schedule's flattened layer
+index ``sched_idx[t]`` — into the same VMEM-resident program, so the
+(B, P, T) ``tproc_sched`` tensor is never materialised between the cost
+pass and the recurrence. The grid order is tunable (``batch_major`` keeps
+one individual's SMEM index tensors resident across the inner batch
+sweep; ``pop_major`` streams individuals fastest) and picked by a small
+timed probe cached per shape when running compiled on TPU.
 """
 from __future__ import annotations
 
 import functools
+import os
+import time
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+GRID_ORDERS = ("batch_major", "pop_major")
+_GRID_ORDER_ENV = "REPRO_FUSED_GRID_ORDER"
+_AUTOTUNE_CACHE: dict[tuple, str] = {}
 
 
 def _mapping_eval_kernel(chip_ref, ppos_ref, tproc_ref, end_ref, free_ref,
@@ -109,3 +125,184 @@ def mapping_eval(
       ppos.astype(jnp.int32).reshape(pop, t_len * width),
       t_proc.astype(jnp.float32))
     return end, free
+
+
+# --------------------------------------------------------------------------
+# Fused pass-A + pass-B megakernel
+# --------------------------------------------------------------------------
+
+
+def _mapping_eval_fused_kernel(sched_ref, chip_ref, ppos_ref, tproc_ref,
+                               end_ref, free_ref, end_scr, free_scr, *,
+                               t_len: int, width: int, n_chips: int):
+    """One (individual, batch) grid cell: gather each step's processing
+    time from the un-gathered cost row (pass A) and run the sequential
+    end/free recurrence (pass B), all from VMEM/SMEM-resident state."""
+    end_scr[...] = jnp.zeros_like(end_scr)     # (1, T+1); slot T stays 0
+    free_scr[...] = jnp.zeros_like(free_scr)   # (C, 1)
+
+    def step(t, _):
+        c = chip_ref[0, t]
+        pred_end = jnp.float32(0.0)
+        for w in range(width):                 # static unroll; W is small
+            idx = ppos_ref[0, t * width + w]
+            e = pl.load(end_scr, (pl.dslice(0, 1), pl.dslice(idx, 1)))
+            pred_end = jnp.maximum(pred_end, e[0, 0])
+        chip_free = pl.load(free_scr, (pl.dslice(c, 1), slice(None)))
+        start = jnp.maximum(chip_free[0, 0], pred_end)
+        li = sched_ref[0, t]                   # pass-A gather, in-kernel
+        tp = pl.load(tproc_ref,
+                     (pl.dslice(0, 1), pl.dslice(0, 1), pl.dslice(li, 1)))
+        fin = start + tp[0, 0, 0]
+        pl.store(end_scr, (pl.dslice(0, 1), pl.dslice(t, 1)),
+                 fin.reshape(1, 1))
+        pl.store(free_scr, (pl.dslice(c, 1), slice(None)), fin.reshape(1, 1))
+        return 0
+
+    jax.lax.fori_loop(0, t_len, step, 0)
+    end_ref[...] = end_scr[0, :t_len].reshape(1, 1, t_len)
+    free_ref[...] = free_scr[:, 0].reshape(1, 1, n_chips)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_chips", "grid_order", "interpret"))
+def _mapping_eval_fused_call(t_proc, sched_idx, chip, ppos, n_chips,
+                             grid_order, interpret):
+    n_batch, pop, n_flat = t_proc.shape
+    t_len = chip.shape[-1]
+    width = ppos.shape[-1]
+    kernel = functools.partial(_mapping_eval_fused_kernel, t_len=t_len,
+                               width=width, n_chips=n_chips)
+    # batch_major: the batch axis is innermost, so an individual's SMEM
+    # index tensors (sched/chip/ppos blocks, index constant in b) stay
+    # resident across its whole batch sweep and only the (1, 1, L) cost row
+    # streams — the pipeline double-buffers it one grid step ahead.
+    # pop_major: the population axis is innermost; every grid step streams
+    # a new individual's index tensors against a resident batch.
+    if grid_order == "batch_major":
+        grid = (pop, n_batch)
+        smem = lambda p, b: (p, 0)                     # noqa: E731
+        vmem = lambda p, b: (b, p, 0)                  # noqa: E731
+    elif grid_order == "pop_major":
+        grid = (n_batch, pop)
+        smem = lambda b, p: (p, 0)                     # noqa: E731
+        vmem = lambda b, p: (b, p, 0)                  # noqa: E731
+    else:
+        raise ValueError(f"unknown grid order {grid_order!r}; "
+                         f"choose from {GRID_ORDERS}")
+    end, free = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t_len), smem, memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, t_len), smem, memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, t_len * width), smem, memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, n_flat), vmem),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, t_len), vmem),
+            pl.BlockSpec((1, 1, n_chips), vmem),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_batch, pop, t_len), jnp.float32),
+            jax.ShapeDtypeStruct((n_batch, pop, n_chips), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, t_len + 1), jnp.float32),
+            pltpu.VMEM((n_chips, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sched_idx.astype(jnp.int32),
+      chip.astype(jnp.int32),
+      ppos.astype(jnp.int32).reshape(pop, t_len * width),
+      t_proc.astype(jnp.float32))
+    return end, free
+
+
+def default_grid_order() -> str:
+    """The grid order used when none is given and no probe can run:
+    the ``REPRO_FUSED_GRID_ORDER`` environment variable, else
+    ``batch_major`` (index tensors resident across the batch sweep)."""
+    order = os.environ.get(_GRID_ORDER_ENV, "batch_major")
+    if order not in GRID_ORDERS:
+        raise ValueError(f"{_GRID_ORDER_ENV}={order!r}; "
+                         f"choose from {GRID_ORDERS}")
+    return order
+
+
+def autotune_grid_order(t_proc, sched_idx, chip, ppos, n_chips,
+                        interpret: bool = False) -> str:
+    """Pick the faster grid order for this shape by timing both compiled
+    variants once, cached per (B, P, T, W, C, L) shape. Interpret mode
+    never probes (the interpreter's walltime is meaningless) and an
+    explicit ``REPRO_FUSED_GRID_ORDER`` always wins."""
+    if os.environ.get(_GRID_ORDER_ENV):
+        return default_grid_order()
+    if interpret or jax.default_backend() != "tpu":
+        return default_grid_order()
+    key = (t_proc.shape, chip.shape[-1], ppos.shape[-1], n_chips)
+    hit = _AUTOTUNE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    timings = {}
+    for order in GRID_ORDERS:
+        out = _mapping_eval_fused_call(t_proc, sched_idx, chip, ppos,
+                                       n_chips, order, False)
+        jax.block_until_ready(out)             # compile + warm
+        t0 = time.perf_counter()
+        out = _mapping_eval_fused_call(t_proc, sched_idx, chip, ppos,
+                                       n_chips, order, False)
+        jax.block_until_ready(out)
+        timings[order] = time.perf_counter() - t0
+    best = min(timings, key=timings.get)
+    _AUTOTUNE_CACHE[key] = best
+    return best
+
+
+def mapping_eval_fused(
+    t_proc: jax.Array,     # [B, P, L] un-gathered per-individual cost rows
+    sched_idx: jax.Array,  # [P, T] int32 flattened layer index per step
+    chip: jax.Array,       # [P, T] int32 chiplet per scheduled op
+    ppos: jax.Array,       # [P, T, W] int32 padded predecessor positions
+    n_chips: int,
+    grid_order: str | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused pass-A/pass-B timing matrix per (batch, population) member:
+    (end [B, P, T], free [B, P, C]). ``t_proc`` is the UN-gathered
+    (rows * M)-flat cost row; the kernel gathers step t's processing time
+    as ``t_proc[sched_idx[t]]`` in VMEM, so ``tproc_sched`` never exists
+    as a device tensor. ``grid_order=None`` asks the autotune probe (TPU
+    compiled runs only; falls back to :func:`default_grid_order`)."""
+    if grid_order is None:
+        if isinstance(t_proc, jax.core.Tracer):
+            grid_order = default_grid_order()   # inside jit: no probe
+        else:
+            grid_order = autotune_grid_order(t_proc, sched_idx, chip, ppos,
+                                             n_chips, interpret=interpret)
+    return _mapping_eval_fused_call(t_proc, sched_idx, chip, ppos, n_chips,
+                                    grid_order, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_chips",))
+def mapping_eval_fused_host(
+    t_proc: jax.Array,     # [B, P, L] un-gathered per-individual cost rows
+    sched_idx: jax.Array,  # [P, T] int32
+    chip: jax.Array,       # [P, T] int32
+    ppos: jax.Array,       # [P, T, W] int32
+    n_chips: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Off-TPU execution of the fused contract: the pass-A gather and the
+    batched ``lax.scan`` recurrence fused into ONE jitted program (no
+    host round-trip between passes). Bitwise-identical to gathering
+    ``tproc_sched`` and running the dense backend — the gather is exact
+    and the per-step float ops are issued in the same order."""
+    from ..core.timing import dense_pass_b
+
+    n_batch, pop, _ = t_proc.shape
+    t_len = chip.shape[-1]
+    idx = jnp.broadcast_to(sched_idx[None].astype(jnp.int32),
+                           (n_batch, pop, t_len))
+    tproc_sched = jnp.take_along_axis(t_proc.astype(jnp.float32), idx, -1)
+    per_p = jax.vmap(lambda tp, c, pp: dense_pass_b(tp, c, pp, n_chips))
+    return jax.vmap(lambda tp: per_p(tp, chip, ppos))(tproc_sched)

@@ -11,6 +11,8 @@ import jax
 from .decode_attention import decode_attention as _decode_attention
 from .flash_attention import flash_attention as _flash_attention
 from .mapping_eval import mapping_eval as _mapping_eval
+from .mapping_eval import mapping_eval_fused as _mapping_eval_fused
+from .mapping_eval import mapping_eval_fused_host
 from .ssd_scan import ssd_scan as _ssd_scan
 
 
@@ -41,4 +43,13 @@ def ssd_scan(x, dt, a, b_mat, c_mat, chunk=128, interpret=None):
 def mapping_eval(t_proc, chip, ppos, n_chips, interpret=None):
     return _mapping_eval(
         t_proc, chip, ppos, n_chips,
+        interpret=use_interpret() if interpret is None else interpret)
+
+
+def mapping_eval_fused(t_proc, sched_idx, chip, ppos, n_chips,
+                       grid_order=None, interpret=None):
+    """Fused pass-A/pass-B megakernel: ``t_proc`` is the UN-gathered
+    (B, P, rows*M) cost rows, gathered in-kernel via ``sched_idx``."""
+    return _mapping_eval_fused(
+        t_proc, sched_idx, chip, ppos, n_chips, grid_order=grid_order,
         interpret=use_interpret() if interpret is None else interpret)

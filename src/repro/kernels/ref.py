@@ -118,3 +118,21 @@ def mapping_eval_reference(
             end[bi, pi] = endv[:t_len]
             free[bi, pi] = chip_free
     return end, free
+
+
+def mapping_eval_fused_reference(
+    t_proc: np.ndarray,    # [B, P, L] un-gathered per-individual cost rows
+    sched_idx: np.ndarray,  # [P, T] flat cost-row index per schedule step
+    chip: np.ndarray,      # [P, T]
+    ppos: np.ndarray,      # [P, T, W]
+    n_chips: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fused-contract reference (float64): pass A as a numpy gather of the
+    un-gathered cost rows, then :func:`mapping_eval_reference` pass B."""
+    t_proc = np.asarray(t_proc)
+    sched_idx = np.asarray(sched_idx)
+    n_batch, pop, _ = t_proc.shape
+    idx = np.broadcast_to(sched_idx[None],
+                          (n_batch,) + sched_idx.shape)
+    tproc_sched = np.take_along_axis(t_proc, idx, axis=-1)
+    return mapping_eval_reference(tproc_sched, chip, ppos, n_chips)

@@ -90,6 +90,44 @@ def main():
     resident = device_table_resident_bytes()
     assert len(resident) >= 8, f"expected 8 resident devices: {resident}"
 
+    # -- fused megakernel parity (PR 8): both fused routes — the
+    # interpreted megakernel and the off-TPU fused_host XLA program (via
+    # REPRO_TIMING_BACKEND=fused, the deployment route) — sharded vs
+    # single-device AND bitwise against dense, on a population that does
+    # not divide the 8-device mesh (pad-lane regression) -----------------
+    import os
+
+    from repro.core.timing import FusedTimingBackend
+
+    pop7 = [random_encoding(rng, g1.rows, g1.n_cols, HW.n_chiplets)
+            for _ in range(7)]
+    ge_dense = GroupPopulationEvaluator([g1, g2], [t1, t2], HW,
+                                        backend="dense", devices=1)
+    ref = ge_dense.evaluate_population(pop7)
+    tm_ref = ge_dense.timing_matrix(pop7)
+    os.environ["REPRO_TIMING_BACKEND"] = "fused"
+    try:
+        for be, want in ((None, "fused_host"),
+                         (FusedTimingBackend(interpret=True), "fused")):
+            f1 = GroupPopulationEvaluator([g1, g2], [t1, t2], HW,
+                                          backend=be, devices=1)
+            f8 = GroupPopulationEvaluator([g1, g2], [t1, t2], HW,
+                                          backend=be, devices=8)
+            assert f1._backend == want, (f1._backend, want)
+            o1 = f1.evaluate_population(pop7)
+            o8 = f8.evaluate_population(pop7)
+            for a, b, r in zip(o1, o8, ref):
+                assert np.array_equal(a, b), \
+                    f"fused({want}) sharded parity broke"
+                assert np.array_equal(a, r), f"fused({want}) != dense"
+            tm1, tm8 = f1.timing_matrix(pop7), f8.timing_matrix(pop7)
+            assert np.array_equal(tm1.op_end_s, tm8.op_end_s)
+            assert np.array_equal(tm1.op_end_s, tm_ref.op_end_s)
+            assert np.array_equal(tm1.op_start_s, tm_ref.op_start_s)
+            assert np.array_equal(tm1.chip_free_s, tm_ref.chip_free_s)
+    finally:
+        del os.environ["REPRO_TIMING_BACKEND"]
+
     # -- GA search identity: same seed, sharded vs single-device fitness,
     # the whole history must match bitwise ------------------------------
     cfg = GAConfig(population=12, generations=4, seed=0)

@@ -98,3 +98,130 @@ def test_mapping_eval_kernel(seed, nb, pop, rows, cols, chips):
     e_end, e_free = ref.mapping_eval_reference(t_proc, chip, ppos, chips)
     np.testing.assert_allclose(np.asarray(end), e_end, rtol=1e-5)
     np.testing.assert_allclose(np.asarray(free), e_free, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fused pass-A/pass-B megakernel
+# ---------------------------------------------------------------------------
+
+
+def _fused_case(seed, nb, pop, rows, cols, width, chips):
+    """Random fused-kernel inputs: un-gathered (rows*cols)-flat cost rows,
+    a random *permutation* sched_idx per individual (every cost cell used
+    once, like a real schedule), random chips, random valid ppos."""
+    rng = np.random.default_rng(seed)
+    t_len = rows * cols
+    t_proc = rng.uniform(0.1, 1.0, size=(nb, pop, t_len)).astype(np.float32)
+    sched = np.stack([rng.permutation(t_len) for _ in range(pop)]
+                     ).astype(np.int32)
+    chip = rng.integers(0, chips, size=(pop, t_len)).astype(np.int32)
+    ppos = np.full((pop, t_len, width), t_len, dtype=np.int32)
+    for t in range(1, t_len):
+        k = rng.integers(0, width + 1)
+        if k:
+            ppos[:, t, :k] = rng.integers(0, t, size=(pop, k))
+    return t_proc, sched, chip, ppos
+
+
+@pytest.mark.parametrize("grid_order", ["batch_major", "pop_major"])
+@pytest.mark.parametrize("nb,pop", [(1, 3), (2, 5), (3, 1)])
+def test_mapping_eval_fused_matches_unfused_and_reference(grid_order, nb,
+                                                          pop):
+    """The megakernel's in-kernel gather + recurrence is BITWISE the
+    unfused kernel fed the pre-gathered tproc, under both grid orders and
+    odd (non-multiple) population sizes; float64 reference to 1e-6."""
+    chips = 4
+    t_proc, sched, chip, ppos = _fused_case(nb * 10 + pop, nb, pop,
+                                            rows=3, cols=5, width=2,
+                                            chips=chips)
+    end_f, free_f = ops.mapping_eval_fused(
+        jnp.asarray(t_proc), jnp.asarray(sched), jnp.asarray(chip),
+        jnp.asarray(ppos), chips, grid_order=grid_order)
+    gathered = np.take_along_axis(
+        t_proc, np.broadcast_to(sched[None], t_proc.shape), axis=-1)
+    end_u, free_u = ops.mapping_eval(jnp.asarray(gathered),
+                                     jnp.asarray(chip), jnp.asarray(ppos),
+                                     chips)
+    np.testing.assert_array_equal(np.asarray(end_f), np.asarray(end_u))
+    np.testing.assert_array_equal(np.asarray(free_f), np.asarray(free_u))
+    e_end, e_free = ref.mapping_eval_fused_reference(t_proc, sched, chip,
+                                                     ppos, chips)
+    np.testing.assert_allclose(np.asarray(end_f), e_end, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(free_f), e_free, rtol=1e-5)
+
+
+def test_mapping_eval_fused_host_bitwise_matches_kernel():
+    """The off-TPU fused XLA program and the interpreted megakernel are the
+    same function bit for bit (same gather, same op order per step)."""
+    chips = 3
+    t_proc, sched, chip, ppos = _fused_case(7, 2, 4, rows=2, cols=6,
+                                            width=3, chips=chips)
+    args = (jnp.asarray(t_proc), jnp.asarray(sched), jnp.asarray(chip),
+            jnp.asarray(ppos), chips)
+    end_k, free_k = ops.mapping_eval_fused(*args)
+    end_h, free_h = ops.mapping_eval_fused_host(*args)
+    np.testing.assert_array_equal(np.asarray(end_k), np.asarray(end_h))
+    np.testing.assert_array_equal(np.asarray(free_k), np.asarray(free_h))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), nb=st.integers(1, 3), pop=st.integers(1, 5),
+       rows=st.integers(1, 3), cols=st.integers(2, 5), width=st.integers(1, 4),
+       chips=st.integers(1, 4),
+       grid_order=st.sampled_from(["batch_major", "pop_major"]))
+def test_mapping_eval_fused_property(seed, nb, pop, rows, cols, width, chips,
+                                     grid_order):
+    """Property: for ANY random ppos layout (variable live-lane counts,
+    sentinel-only steps included), fused == gather+unfused bitwise and
+    == float64 reference to 1e-6."""
+    t_proc, sched, chip, ppos = _fused_case(seed, nb, pop, rows, cols,
+                                            width, chips)
+    end_f, free_f = ops.mapping_eval_fused(
+        jnp.asarray(t_proc), jnp.asarray(sched), jnp.asarray(chip),
+        jnp.asarray(ppos), chips, grid_order=grid_order)
+    gathered = np.take_along_axis(
+        t_proc, np.broadcast_to(sched[None], t_proc.shape), axis=-1)
+    end_u, free_u = ops.mapping_eval(jnp.asarray(gathered),
+                                     jnp.asarray(chip), jnp.asarray(ppos),
+                                     chips)
+    np.testing.assert_array_equal(np.asarray(end_f), np.asarray(end_u))
+    np.testing.assert_array_equal(np.asarray(free_f), np.asarray(free_u))
+    e_end, e_free = ref.mapping_eval_fused_reference(t_proc, sched, chip,
+                                                     ppos, chips)
+    np.testing.assert_allclose(np.asarray(end_f), e_end, rtol=1e-5)
+
+
+def test_fused_grid_order_env_and_validation(monkeypatch):
+    from repro.kernels import mapping_eval as me
+
+    monkeypatch.delenv("REPRO_FUSED_GRID_ORDER", raising=False)
+    assert me.default_grid_order() == "batch_major"
+    monkeypatch.setenv("REPRO_FUSED_GRID_ORDER", "pop_major")
+    assert me.default_grid_order() == "pop_major"
+    monkeypatch.setenv("REPRO_FUSED_GRID_ORDER", "bogus")
+    with pytest.raises(ValueError, match="REPRO_FUSED_GRID_ORDER"):
+        me.default_grid_order()
+    monkeypatch.delenv("REPRO_FUSED_GRID_ORDER", raising=False)
+    with pytest.raises(ValueError):
+        ops.mapping_eval_fused(jnp.zeros((1, 1, 4)),
+                               jnp.zeros((1, 4), jnp.int32),
+                               jnp.zeros((1, 4), jnp.int32),
+                               jnp.full((1, 4, 1), 4, jnp.int32), 2,
+                               grid_order="bogus")
+
+
+def test_fused_autotune_probe_off_tpu_uses_default(monkeypatch):
+    """Off-TPU the probe never times (walltime meaningless interpreted):
+    it resolves straight to default_grid_order, honouring the env var."""
+    from repro.kernels import mapping_eval as me
+
+    t_proc, sched, chip, ppos = _fused_case(0, 1, 2, rows=2, cols=2,
+                                            width=1, chips=2)
+    monkeypatch.delenv("REPRO_FUSED_GRID_ORDER", raising=False)
+    assert me.autotune_grid_order(jnp.asarray(t_proc), jnp.asarray(sched),
+                                  jnp.asarray(chip), jnp.asarray(ppos),
+                                  2) == "batch_major"
+    monkeypatch.setenv("REPRO_FUSED_GRID_ORDER", "pop_major")
+    assert me.autotune_grid_order(jnp.asarray(t_proc), jnp.asarray(sched),
+                                  jnp.asarray(chip), jnp.asarray(ppos),
+                                  2) == "pop_major"

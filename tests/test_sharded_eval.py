@@ -92,6 +92,32 @@ def test_sharded_group_eval_matches_single_device_inprocess():
         assert np.array_equal(a, b)
 
 
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs a multi-device session (sharded CI job)")
+def test_sharded_fused_matches_single_device_and_dense_inprocess():
+    """Pad-lane regression on the fused megakernel: a population that does
+    not divide the mesh, evaluated sharded with backend='fused', is
+    bitwise the single-device result AND bitwise dense — a padded lane
+    that leaked into end/free would break both equalities."""
+    from repro.core.timing import FusedTimingBackend
+
+    hw = make_hardware(64, "M", layout=None, tensor_parallel=2)
+    hw = hw.replace(layout=tuple(["WS", "OS"] * (hw.n_chiplets // 2)))
+    g, t = _graph_tables(hw)
+    rng = np.random.default_rng(5)
+    pop = [random_encoding(rng, g.rows, g.n_cols, hw.n_chiplets)
+           for _ in range(jax.device_count() + 3)]   # non-multiple
+    ref = GroupPopulationEvaluator([g], [t], hw, backend="dense",
+                                   devices=1).evaluate_population(pop)
+    for be in ("fused", FusedTimingBackend(interpret=True)):
+        f1 = GroupPopulationEvaluator([g], [t], hw, backend=be, devices=1)
+        fN = GroupPopulationEvaluator([g], [t], hw, backend=be)
+        o1, oN = f1.evaluate_population(pop), fN.evaluate_population(pop)
+        for a, b, r in zip(o1, oN, ref):
+            assert np.array_equal(a, b)
+            assert np.array_equal(a, r)
+
+
 def test_sharded_parity_subprocess():
     """The full 8-device parity suite: evaluator/GA/warm-start/co-search
     bitwise equality between devices=1 and devices=8 (see

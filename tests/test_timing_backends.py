@@ -1,9 +1,12 @@
 """Pluggable timing backends: shared parity suite (oracle == dense ==
-pallas-interpret on full timing matrices), backend selection/fallback,
-the persistent cost-table cache, and the SLO-aware GA ranking on true
-per-request timings (surrogate vs true ordering)."""
+pallas-interpret == fused-interpret on full timing matrices), the fused
+megakernel's BITWISE parity suite (both grid orders, non-multiple
+populations, single/multi-batch), backend selection/fallback + dispatch
+counters, the persistent cost-table cache, and the SLO-aware GA ranking
+on true per-request timings (surrogate vs true ordering)."""
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import timing
 from repro.core.compass import Scenario, hardware_objective, search_mapping
@@ -24,11 +27,13 @@ from repro.core.objectives import GoodputUnderSLO, get_objective
 from repro.core.streams import RequestStream, StreamRequest, rollout
 from repro.core.timing import (
     DenseTimingBackend,
+    FusedTimingBackend,
     OracleTimingBackend,
     PallasTimingBackend,
     fold_request_timings,
     get_timing_backend,
     resolve_timing_backend,
+    timing_backend_stats,
 )
 from repro.core.workload import (
     LLMSpec,
@@ -40,7 +45,8 @@ from repro.core.workload import (
 from repro.serving.scheduler import get_scheduler
 
 BACKENDS = [OracleTimingBackend(), DenseTimingBackend(),
-            PallasTimingBackend(interpret=True)]
+            PallasTimingBackend(interpret=True),
+            FusedTimingBackend(interpret=True)]
 
 
 def _paper_cases():
@@ -135,6 +141,107 @@ def test_group_evaluator_dense_vs_pallas_interpret():
 
 
 # ---------------------------------------------------------------------------
+# Fused megakernel: BITWISE parity vs dense through the evaluators
+# ---------------------------------------------------------------------------
+
+
+def _group_case(n_batches):
+    spec, batch, mb = _paper_cases()[0]
+    hw = _hw()
+    graphs, tables = [], []
+    for i in range(n_batches):
+        gi = build_execution_graph(
+            spec, [prefill_request(64 + 16 * i), prefill_request(32),
+                   decode_request(100 + 50 * i)], mb, tp=2, n_blocks=2)
+        graphs.append(gi)
+        tables.append(CostTables.build(gi, hw))
+    return graphs, tables, hw
+
+
+@pytest.mark.parametrize("grid_order", ["batch_major", "pop_major"])
+@pytest.mark.parametrize("n_batches,pop_size", [(1, 5), (2, 3), (2, 7)])
+def test_fused_bitwise_matches_dense_through_evaluator(grid_order, n_batches,
+                                                       pop_size):
+    """The fused megakernel's end/free/latency/energy are BITWISE the
+    dense backend's through GroupPopulationEvaluator — both grid orders,
+    single- and multi-batch groups, odd (non-multiple) population sizes.
+    Float max is exact and the fused step issues the same single add in
+    the same order, so this is equality, not allclose."""
+    graphs, tables, hw = _group_case(n_batches)
+    rng = np.random.default_rng(pop_size)
+    g = graphs[0]
+    pop = [random_encoding(rng, g.rows, g.n_cols, hw.n_chiplets)
+           for _ in range(pop_size)]
+    ge_d = GroupPopulationEvaluator(graphs, tables, hw, backend="dense")
+    ge_f = GroupPopulationEvaluator(
+        graphs, tables, hw,
+        backend=FusedTimingBackend(interpret=True, grid_order=grid_order))
+    assert ge_f._backend == "fused" and ge_f._grid_order == grid_order
+    lat_d, en_d = ge_d.evaluate_population(pop)
+    lat_f, en_f = ge_f.evaluate_population(pop)
+    np.testing.assert_array_equal(lat_f, lat_d)
+    np.testing.assert_array_equal(en_f, en_d)
+    tm_d = ge_d.timing_matrix(pop)
+    tm_f = ge_f.timing_matrix(pop)
+    np.testing.assert_array_equal(tm_f.op_end_s, tm_d.op_end_s)
+    np.testing.assert_array_equal(tm_f.op_start_s, tm_d.op_start_s)
+    np.testing.assert_array_equal(tm_f.chip_free_s, tm_d.chip_free_s)
+
+
+def test_fused_host_route_bitwise_matches_dense_through_evaluator():
+    """backend="fused" (compiled, off-TPU) resolves to the fused_host
+    route — one fused XLA program — and stays bitwise-identical to dense;
+    the reroute is COUNTED, never silent."""
+    import jax
+
+    if jax.default_backend() == "tpu":
+        pytest.skip("host route only exists off-TPU")
+    graphs, tables, hw = _group_case(2)
+    rng = np.random.default_rng(3)
+    g = graphs[0]
+    pop = [random_encoding(rng, g.rows, g.n_cols, hw.n_chiplets)
+           for _ in range(5)]
+    before = timing_backend_stats()
+    ge_f = GroupPopulationEvaluator(graphs, tables, hw, backend="fused")
+    assert ge_f._backend == "fused_host"
+    lat_f, en_f = ge_f.evaluate_population(pop)
+    after = timing_backend_stats()
+    assert after["fallbacks"].get("fused->host", 0) \
+        == before["fallbacks"].get("fused->host", 0) + 1
+    assert after["dispatches"].get("fused_host", 0) \
+        == before["dispatches"].get("fused_host", 0) + 1
+    ge_d = GroupPopulationEvaluator(graphs, tables, hw, backend="dense")
+    lat_d, en_d = ge_d.evaluate_population(pop)
+    np.testing.assert_array_equal(lat_f, lat_d)
+    np.testing.assert_array_equal(en_f, en_d)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), nb=st.integers(1, 3), pop=st.integers(1, 6),
+       t_len=st.integers(2, 24), width=st.integers(1, 5),
+       chips=st.integers(1, 5))
+def test_fused_backend_property_random_ppos(seed, nb, pop, t_len, width,
+                                            chips):
+    """Property: on ANY random padded-ppos layout (variable live lanes,
+    sentinel-only steps, width up to 5) the fused backend's protocol-level
+    pass_b is bitwise the dense backend's."""
+    rng = np.random.default_rng(seed)
+    t_proc = rng.uniform(0.01, 1.0, (nb, pop, t_len)).astype(np.float32)
+    chip = rng.integers(0, chips, (pop, t_len)).astype(np.int32)
+    ppos = np.full((pop, t_len, width), t_len, np.int32)
+    for t in range(1, t_len):
+        k = rng.integers(0, width + 1)
+        if k:
+            ppos[:, t, :k] = rng.integers(0, t, (pop, k))
+    end_d, free_d = DenseTimingBackend().pass_b(t_proc, chip, ppos, chips)
+    for be in (FusedTimingBackend(interpret=True),
+               FusedTimingBackend(interpret=False)):
+        end_f, free_f = be.pass_b(t_proc, chip, ppos, chips)
+        np.testing.assert_array_equal(end_f, end_d)
+        np.testing.assert_array_equal(free_f, free_d)
+
+
+# ---------------------------------------------------------------------------
 # Backend selection / fallback
 # ---------------------------------------------------------------------------
 
@@ -143,6 +250,9 @@ def test_backend_resolution_and_env_default(monkeypatch):
     assert isinstance(get_timing_backend("oracle"), OracleTimingBackend)
     assert isinstance(get_timing_backend("dense"), DenseTimingBackend)
     assert isinstance(get_timing_backend("pallas"), PallasTimingBackend)
+    assert isinstance(get_timing_backend("fused"), FusedTimingBackend)
+    # fused never degrades: resolve keeps the fused backend off-TPU
+    assert isinstance(resolve_timing_backend("fused"), FusedTimingBackend)
     be = DenseTimingBackend()
     assert get_timing_backend(be) is be
     with pytest.raises(ValueError, match="unknown timing backend"):
@@ -161,12 +271,28 @@ def test_pallas_falls_back_to_dense_off_tpu():
 
     if jax.default_backend() == "tpu":
         pytest.skip("fallback rule only applies off-TPU")
+    before = timing_backend_stats()["fallbacks"].get("pallas->dense", 0)
     with pytest.warns(RuntimeWarning, match="falling back to 'dense'"):
         be = resolve_timing_backend("pallas")
     assert isinstance(be, DenseTimingBackend)
+    # the degradation is counted, not silent
+    assert timing_backend_stats()["fallbacks"]["pallas->dense"] == before + 1
     # explicit interpret opts out of the fallback
     be = resolve_timing_backend(PallasTimingBackend(interpret=True))
     assert isinstance(be, PallasTimingBackend)
+
+
+def test_cache_stats_carries_timing_backend_section():
+    from repro.core.observability import cache_stats
+
+    timing.clear_timing_backend_stats()
+    DenseTimingBackend().pass_b(
+        np.ones((1, 1, 3), np.float32),
+        np.zeros((1, 3), np.int32),
+        np.full((1, 3, 1), 3, np.int32), 2)
+    stats = cache_stats()
+    assert stats["timing_backend"]["dispatches"] == {"dense": 1}
+    assert "fallbacks" in stats["timing_backend"]
 
 
 def test_oracle_backend_routes_to_numpy_path():
