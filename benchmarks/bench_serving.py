@@ -40,6 +40,7 @@ from .common import (
     bo_budget,
     cosearch_modes,
     emit,
+    fleet_budget,
     frontier_budget,
     ga_config,
     mixed_cosearch_scenario,
@@ -147,6 +148,123 @@ def goodput_frontier():
         "n_requests": n_req,
         "lines": lines,
         "fixed_point_dominates_one_sweep": dominated,
+    }
+
+
+def fleet_frontier_record():
+    """Fleet frontier: goodput-per-dollar vs offered load, replica count
+    annotated per point (the ROADMAP's fleet output record).
+
+    At each rate on a fixed grid the scale-out policy search compares the
+    operator's options — keep the 1-replica fleet, add a replica (the
+    router splits the stream deterministically, so both points price the
+    SAME request population), swap the scheduler, or re-search the
+    mapping warm-started from the completed search (PR 5's ``warm_from``
+    carrier, threaded through the replica's compass pricer) — and the
+    frontier records the winning option's goodput-per-dollar. Replicas
+    price their rollouts with a full mapping search on a fixed hardware
+    config; the dollar denominator is the searched point's own
+    ``mc_total`` summed over replicas. ``sweep_knee`` (fixed grid, no
+    refinement: each probe is several mapping searches) supplies the
+    knee bookkeeping, so this record's knee conventions match the
+    refined single-server frontier's."""
+    import numpy as np
+    from repro.configs import all_archs
+    from repro.core.compass import search_mapping
+    from repro.core.frontier import sweep_knee
+    from repro.core.hardware import make_hardware
+    from repro.core.objectives import GoodputUnderSLO
+    from repro.core.streams import RequestStream, rollout
+    from repro.core.traces import SHAREGPT
+    from repro.core.workload import DECODE
+    from repro.fleet import Fleet, PlannedReplica, compass_pricer, \
+        plan_scale_out
+    from repro.serving.scheduler import get_scheduler
+
+    fb = fleet_budget()
+    spec = all_archs()["llama3.2-3b"].llm_spec()
+    hw = make_hardware(512, "L", tensor_parallel=8)
+    hw = hw.replace(layout=tuple(["WS", "OS"] * (hw.n_chiplets // 2)))
+    base = RequestStream("sharegpt-fleet", trace=SHAREGPT, rate=1.0,
+                         n_requests=fb["n_requests"], warm_fraction=0.25,
+                         max_new_tokens_cap=8, seed=0)
+
+    # SLOs from a latency pre-search at the middle of the load grid, set
+    # at the 60th percentile of its timings — binding but not zeroing
+    # goodput at this hardware scale (mixed_cosearch_scenario's recipe)
+    mid = sorted(fb["rates"])[len(fb["rates"]) // 2]
+    pre_ro = rollout(base.with_rate(mid), get_scheduler("orca"),
+                     max_slots=fb["max_slots"], max_iters=fb["max_iters"])
+    pre_mbs = [hw.micro_batch_decode
+               if any(r.kind == DECODE for r in b) else hw.micro_batch_prefill
+               for b in pre_ro.batches]
+    pre = search_mapping(spec, pre_ro.batches, hw, pre_mbs, ga_config(),
+                         objective="latency", n_blocks=2)
+    pre_tim = pre_ro.timings(pre.batch_latencies)
+    obj = GoodputUnderSLO(
+        ttft_slo_s=float(np.percentile(pre_tim.cold_ttft_s, 60)),
+        tpot_slo_s=float(np.percentile(pre_tim.tpot_s, 60)))
+
+    def replica(name="r0", warm_from=None):
+        return PlannedReplica(
+            pricer=compass_pricer(spec, hw, ga_config(), objective=obj,
+                                  n_blocks=2, warm_from=warm_from),
+            scheduler="orca", max_slots=fb["max_slots"],
+            max_iters=fb["max_iters"], name=name)
+
+    def re_search(rep, res):
+        # warm-start the next mapping search from the keep-serve's
+        # completed search (carried in the compass pricer's meta)
+        return replica(name=f"{rep.name}'",
+                       warm_from=res.meta.get("search_output"))
+
+    points = []
+
+    def evaluate(rate):
+        with Timer() as t:
+            dec = plan_scale_out(
+                Fleet([replica()]), base, rate, objective=obj,
+                schedulers=fb["schedulers"], re_search=re_search)
+        best = dec.best
+        print(f"# fleet rate={rate:7.3f} best={best.action:12s} "
+              f"replicas={best.fleet.n_replicas} "
+              f"goodput/$={best.score:9.4f} wall={t.us/1e6:.1f}s")
+        emit(f"fleet_frontier_{rate:g}", t.us,
+             f"best={best.action} gpd={best.score:.4f}")
+        points.append({
+            "rate": rate,
+            "best_action": best.action,
+            "n_replicas": best.fleet.n_replicas,
+            "goodput_per_dollar": round(best.score, 6),
+            "goodput_req_per_s": round(best.result.goodput(obj), 4),
+            "mc_total": round(best.result.mc_total, 1),
+            "loads": best.result.route.loads().tolist(),
+            "options": [
+                {"action": o.action,
+                 "n_replicas": o.fleet.n_replicas,
+                 "goodput_per_dollar":
+                     None if o.score == float("-inf")
+                     else round(o.score, 6),
+                 "truncated": bool(o.result and o.result.truncated)}
+                for o in dec.options],
+            "wall_s": round(t.us / 1e6, 2),
+        })
+        return best.score, {}
+
+    res = sweep_knee(evaluate, fb["rates"])
+    emit("fleet_frontier_knee", 0,
+         f"knee={res.knee_rate:g} saturated={res.knee_saturated}")
+    return {
+        "objective": f"goodput_per_dollar@ttft{obj.ttft_slo_s:.3g}s"
+                     f"/tpot{obj.tpot_slo_s:.3g}s",
+        "slo_percentile_of_latency_presearch": 60,
+        "rates": list(fb["rates"]),
+        "n_requests": fb["n_requests"],
+        "max_slots_per_replica": fb["max_slots"],
+        "points": points,
+        "knee_rate": res.knee_rate,
+        "peak_goodput_per_dollar": round(res.peak_goodput, 6),
+        "knee_saturated": res.knee_saturated,
     }
 
 
@@ -301,21 +419,31 @@ def measured_service_record():
     }
 
 
+def _merge_section(out_path: str, key: str, section) -> dict:
+    """Recompute one section and merge it into the existing record."""
+    rec = {}
+    try:
+        with open(out_path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError):
+        pass
+    rec[key] = section
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+            f.write("\n")
+    return rec
+
+
 def run(out_path: str = "BENCH_serving.json", measured: bool = False,
-        measured_only: bool = False):
+        measured_only: bool = False, fleet: bool = False,
+        fleet_only: bool = False):
     if measured_only:
-        rec = {}
-        try:
-            with open(out_path) as f:
-                rec = json.load(f)
-        except (OSError, ValueError):
-            pass
-        rec["measured_service"] = measured_service_record()
-        if out_path:
-            with open(out_path, "w") as f:
-                json.dump(rec, f, indent=2)
-                f.write("\n")
-        return rec
+        return _merge_section(out_path, "measured_service",
+                              measured_service_record())
+    if fleet_only:
+        return _merge_section(out_path, "fleet_frontier",
+                              fleet_frontier_record())
     t0 = time.time()
     frontier = goodput_frontier()
     mix = fixed_point_vs_one_sweep()
@@ -391,6 +519,8 @@ def run(out_path: str = "BENCH_serving.json", measured: bool = False,
     }
     if measured:
         rec["measured_service"] = measured_service_record()
+    if fleet:
+        rec["fleet_frontier"] = fleet_frontier_record()
     if out_path:
         with open(out_path, "w") as f:
             json.dump(rec, f, indent=2)
@@ -408,5 +538,12 @@ if __name__ == "__main__":
     ap.add_argument("--measured-only", action="store_true",
                     help="recompute only the measured-service section and "
                          "merge it into --out")
+    ap.add_argument("--fleet", action="store_true",
+                    help="also run the fleet frontier (goodput-per-dollar "
+                         "vs offered load, replica count annotated)")
+    ap.add_argument("--fleet-only", action="store_true",
+                    help="recompute only the fleet-frontier section and "
+                         "merge it into --out")
     args = ap.parse_args()
-    run(args.out, measured=args.measured, measured_only=args.measured_only)
+    run(args.out, measured=args.measured, measured_only=args.measured_only,
+        fleet=args.fleet, fleet_only=args.fleet_only)

@@ -52,6 +52,22 @@ def frontier_budget():
                 rel_tol=0.5, extend_factor=2.0)
 
 
+def fleet_budget():
+    """Fleet-frontier budgets (benchmarks/bench_serving.py --fleet): the
+    fixed offered-load grid (each probe runs a scale-out policy search —
+    several full mapping searches — so the grid stays coarse and
+    unrefined: ``sweep_knee``, not ``refine_knee``), the per-replica slot
+    budget (small enough that load actually queues), and the replica
+    horizon. COMPASS_FULL widens the grid and the stream so the
+    goodput-per-dollar knee is interior."""
+    if FULL:
+        return dict(rates=(0.5, 1.0, 2.0, 4.0, 8.0), n_requests=64,
+                    max_slots=4, max_iters=4096,
+                    schedulers=("chunked_prefill",))
+    return dict(rates=(0.5, 2.0, 8.0), n_requests=12, max_slots=2,
+                max_iters=2048, schedulers=())
+
+
 def cosearch_modes(max_rounds_fp: int | None = None):
     """The three comparable co-search configurations (one_sweep /
     fixed_point / joint) shared by the serving frontier and the

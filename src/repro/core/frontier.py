@@ -31,7 +31,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
-__all__ = ["FrontierPoint", "FrontierResult", "knee_index", "refine_knee"]
+__all__ = ["FrontierPoint", "FrontierResult", "knee_index", "refine_knee",
+           "sweep_knee"]
 
 
 @dataclass
@@ -80,6 +81,45 @@ def knee_index(points: Sequence[FrontierPoint],
         if p.goodput >= peak - tol:
             best = i                  # sorted by rate: last tie wins
     return best
+
+
+def sweep_knee(
+    evaluate: Callable[[float], "tuple[float, dict] | float"],
+    rates: Sequence[float],
+) -> FrontierResult:
+    """Price a fixed rate grid once — no refinement — and report its knee.
+
+    The fleet frontier's sweep primitive: each probe there is N replica
+    mapping searches plus a scale-out policy search, so adaptive
+    bisection around the knee is not worth its probe budget — but the
+    knee bookkeeping (plateau ties break to the highest rate, a peak on
+    either grid boundary is flagged ``knee_saturated``, the bracket is
+    the grid neighbours) must match :func:`refine_knee` so fixed-grid and
+    refined curves are comparable records. ``converged`` is always False:
+    an unrefined bracket is grid-spacing wide by construction.
+    """
+    uniq = sorted(dict.fromkeys(float(r) for r in rates))
+    if not uniq:
+        raise ValueError("need at least one rate")
+    if any(r <= 0 for r in uniq):
+        raise ValueError("rates must be positive")
+    pts = []
+    for r in uniq:
+        out = evaluate(r)
+        goodput, meta = out if isinstance(out, tuple) else (out, {})
+        pts.append(FrontierPoint(r, float(goodput), dict(meta)))
+    k = knee_index(pts)
+    lo = pts[k - 1].rate if k > 0 else pts[k].rate
+    hi = pts[k + 1].rate if k + 1 < len(pts) else pts[k].rate
+    return FrontierResult(
+        points=pts,
+        knee_rate=pts[k].rate,
+        peak_goodput=pts[k].goodput,
+        knee_saturated=k == len(pts) - 1 or k == 0,
+        bracket=(lo, hi),
+        probes=0,
+        converged=False,
+    )
 
 
 def refine_knee(

@@ -223,12 +223,38 @@ class GoodputUnderSLO(_StreamObjective):
         return ~self._ok(timings)
 
 
+class GoodputPerDollar(GoodputUnderSLO):
+    """Negated goodput per dollar of hardware: -(good requests / makespan)
+    / MC. The fleet-level co-design metric — "add a replica" doubles the
+    denominator, so it only wins when the extra replica at least doubles
+    the goodput the SLOs let through. Like EDP·MC, the MC factor is
+    constant per hardware point, so the mapping search runs on the
+    MC-free ``inner()`` (plain goodput-under-SLO) and the full objective
+    applies at the hardware/fleet level."""
+
+    uses_mc = True
+
+    def __init__(self, ttft_slo_s: float = 0.5, tpot_slo_s: float = 0.1):
+        super().__init__(ttft_slo_s, tpot_slo_s)
+        self.name = f"goodput_per_dollar@ttft{ttft_slo_s:g}s" \
+                    f"/tpot{tpot_slo_s:g}s"
+
+    def inner(self):
+        return GoodputUnderSLO(self.ttft_slo_s, self.tpot_slo_s)
+
+    def score(self, latency_s, energy_j, mc=1.0, timings=None):
+        if mc <= 0:
+            raise ValueError(f"monetary cost must be positive, got {mc}")
+        return float(self.score_timings(self._timings(timings))) / mc
+
+
 _NAMED = {
     "edp": EDP,
     "edp_mc": EDPxMC,
     "latency": Latency,
     "energy": Energy,
     "goodput": GoodputUnderSLO,
+    "goodput_per_dollar": GoodputPerDollar,
 }
 _PCTL = re.compile(r"^(ttft|tpot)_p(\d+(?:\.\d+)?)$")
 

@@ -196,6 +196,7 @@ class RequestTimings:
     warm: np.ndarray          # (R,) bool — TTFT undefined for these
     makespan_s: "float | np.ndarray"
     synthetic: bool = False   # fixed-batch shim: no real scheduler timing
+    truncated: bool = False   # rollout hit its iteration horizon mid-flight
 
     @property
     def cold_ttft_s(self) -> np.ndarray:
@@ -216,6 +217,11 @@ class StreamRollout:
     n_new_tokens: np.ndarray         # (R,) tokens generated within horizon
     warm: np.ndarray                 # (R,) bool
     synthetic: bool = False
+    # the iteration budget (max_iters) ran out with requests still in
+    # flight: the rollout under-reports their work, so objectives (and the
+    # fleet accounting) can refuse or penalise it instead of pricing the
+    # shortened schedule as healthy
+    truncated: bool = False
 
     @property
     def n_requests(self) -> int:
@@ -239,6 +245,11 @@ class StreamRollout:
         fin = self.done_b >= 0
         fb = np.where(served, self.first_b, 0)
         db = np.where(fin, self.done_b, 0)
+        # a request can arrive AFTER the last executed iteration (routine
+        # once a router splits streams: a replica may drain before a late
+        # arrival, or the horizon may cut first) — arrival_b is then
+        # len(batches), one past the cum index range. Clamp: such requests
+        # are never served, so ttft is inf regardless of the index used.
         arr = np.minimum(self.arrival_b, nb - 1)
         ttft = np.where(served, cum[..., fb + 1] - cum[..., arr], np.inf)
         steps = np.maximum(self.n_new_tokens - 1, 1)
@@ -251,7 +262,8 @@ class StreamRollout:
             finished=np.broadcast_to(fin, ttft.shape).copy(),
             warm=self.warm,
             makespan_s=float(makespan) if lat.ndim == 1 else makespan,
-            synthetic=self.synthetic)
+            synthetic=self.synthetic,
+            truncated=self.truncated)
 
 
 def _fixed_rollout(stream: RequestStream) -> StreamRollout:
@@ -305,7 +317,10 @@ def rollout(stream: RequestStream, scheduler: Scheduler | None = None,
             serve.append(ServeRequest(
                 i, [0] * max(s.prompt_len, 1), s.max_new_tokens,
                 arrived_iter=s.arrival_iter))
-    n_slots = max_slots if max_slots is not None else len(serve)
+    # max(1, .): an EMPTY sub-stream (a router may assign a replica zero
+    # requests) still needs a valid slot count to pass plan_rollout's
+    # max_slots >= 1 guard; its loop never runs either way
+    n_slots = max_slots if max_slots is not None else max(len(serve), 1)
 
     n = len(serve)
     is_warm = np.asarray([s.warm for s in sreqs], dtype=bool)
@@ -344,4 +359,99 @@ def rollout(stream: RequestStream, scheduler: Scheduler | None = None,
         done_b=done_b,
         n_new_tokens=np.asarray([len(r.generated) for r in serve], dtype=int),
         warm=is_warm,
+        truncated=any(r.done_iter is None for r in serve),
     )
+
+
+# --------------------------------------------------------------------------
+# Stream splitting / timing merging (the fleet layer's primitives)
+# --------------------------------------------------------------------------
+
+
+def split_stream(stream: RequestStream, assignment,
+                 n_parts: int, seed: int | None = None,
+                 ) -> tuple[tuple[RequestStream, ...], tuple[np.ndarray, ...]]:
+    """Split a stream's sampled population into ``n_parts`` explicit
+    sub-streams by a per-request ``assignment`` (part index, sample order).
+
+    Arrival iterations pass through unchanged — each sub-stream sees the
+    global clock, so a 1-part split is the identity: rolling out the single
+    sub-stream is bit-identical to rolling out ``stream`` directly (the
+    fleet layer's keystone invariant). Returns ``(substreams, indices)``
+    where ``indices[p]`` maps part ``p``'s request order back to the
+    original sample order (the input of :func:`merge_timings`).
+
+    The assignment is the router's job (``repro.fleet.router``); this
+    function only owns the mechanics, and requires a stream with a request
+    population to split (fixed-batch streams have none).
+    """
+    if stream.is_fixed:
+        raise ValueError(f"stream {stream.name!r} is fixed-batch: it has "
+                         "no request population to split")
+    reqs = stream.sample(seed)
+    a = np.asarray(assignment, dtype=int)
+    if a.shape != (len(reqs),):
+        raise ValueError(f"assignment shape {a.shape} != ({len(reqs)},) "
+                         "requests")
+    if len(reqs) and (a.min() < 0 or a.max() >= n_parts):
+        raise ValueError(f"assignment values must lie in [0, {n_parts}); "
+                         f"got [{a.min()}, {a.max()}]")
+    subs, indices = [], []
+    for p in range(n_parts):
+        ix = np.flatnonzero(a == p)
+        subs.append(RequestStream.from_requests(
+            [reqs[j] for j in ix], name=f"{stream.name}[{p}/{n_parts}]"))
+        indices.append(ix)
+    return tuple(subs), tuple(indices)
+
+
+def merge_timings(parts: Sequence[RequestTimings],
+                  indices: Sequence[np.ndarray],
+                  n_requests: int) -> RequestTimings:
+    """Merge per-sub-stream timings back into one request-indexed view.
+
+    ``indices[p]`` maps part ``p``'s request axis to the original sample
+    order (disjoint; from :func:`split_stream`). Replicas run concurrently,
+    so the merged makespan is the elementwise max over parts. Requests no
+    part served (an index never covered) read as unserved: inf TTFT/TPOT,
+    unfinished, cold. A single full-coverage part merges to itself bit for
+    bit — scatter copies the float bits unchanged.
+    """
+    if len(parts) != len(indices):
+        raise ValueError(f"{len(parts)} timing parts vs {len(indices)} "
+                         "index sets")
+    cover = np.zeros(n_requests, dtype=int)
+    for p, ix in zip(parts, indices):
+        ix = np.asarray(ix, dtype=int)
+        if p.ttft_s.shape[-1] != len(ix):
+            raise ValueError(
+                f"timing part has {p.ttft_s.shape[-1]} requests but its "
+                f"index set has {len(ix)}")
+        if len(ix) and (ix.min() < 0 or ix.max() >= n_requests):
+            raise ValueError(f"indices out of range [0, {n_requests})")
+        np.add.at(cover, ix, 1)
+    if (cover > 1).any():
+        raise ValueError("index sets overlap: request(s) "
+                         f"{np.flatnonzero(cover > 1).tolist()} appear in "
+                         "more than one part")
+    lead = np.broadcast_shapes(*[p.ttft_s.shape[:-1] for p in parts]) \
+        if parts else ()
+    ttft = np.full(lead + (n_requests,), np.inf)
+    tpot = np.full(lead + (n_requests,), np.inf)
+    fin = np.zeros(lead + (n_requests,), dtype=bool)
+    warm = np.zeros(n_requests, dtype=bool)
+    makespans = []
+    for p, ix in zip(parts, indices):
+        ix = np.asarray(ix, dtype=int)
+        ttft[..., ix] = p.ttft_s
+        tpot[..., ix] = p.tpot_s
+        fin[..., ix] = p.finished
+        warm[ix] = p.warm
+        makespans.append(np.asarray(p.makespan_s, dtype=float))
+    mk = np.maximum.reduce(np.broadcast_arrays(*makespans)) if makespans \
+        else np.zeros(lead)
+    return RequestTimings(
+        ttft_s=ttft, tpot_s=tpot, finished=fin, warm=warm,
+        makespan_s=float(mk) if mk.ndim == 0 else mk,
+        synthetic=any(p.synthetic for p in parts),
+        truncated=any(p.truncated for p in parts))

@@ -120,8 +120,10 @@ class ServingEngine:
                 # or zeroed cache and silently emit garbage
                 raise ValueError(
                     f"request {r.rid} is already prefilled but holds no "
-                    "cache slot; the engine cannot serve warm requests — "
-                    "use repro.core.streams.rollout for pure simulation")
+                    "cache slot; the dense engine cannot serve warm "
+                    "requests — use repro.core.streams.rollout for pure "
+                    "simulation, or AsyncLLMService (which prefaults the "
+                    "warm context into its paged cache at admission)")
         pending = sorted(requests, key=lambda r: r.arrived_iter)
         waiting: list[ServeRequest] = []
         running: list[ServeRequest] = []

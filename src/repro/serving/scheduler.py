@@ -143,20 +143,35 @@ def try_admit(req: ServeRequest, free_slots: list[int]) -> bool:
 
 def admit_arrivals(pending: list[ServeRequest], waiting: list[ServeRequest],
                    running: list[ServeRequest], free_slots: list[int],
-                   it: int) -> None:
+                   it: int, admit=None) -> None:
     """Move requests whose ``arrived_iter`` has come into the scheduler's
     view. Cold requests join the waiting queue; warm (already-prefilled,
-    decode-resident) requests go straight to running and take a slot —
-    if none is free the arrival is retried next iteration."""
-    while pending and pending[0].arrived_iter <= it:
-        r = pending.pop(0)
-        if r.prefill_done:
-            if not try_admit(r, free_slots):
-                pending.insert(0, r)
-                break
-            running.append(r)
+    decode-resident) requests go straight to running and take a slot — if
+    none is free the warm arrival is retried next iteration, and warm
+    arrivals behind it stay queued in FIFO order behind the blocked head.
+
+    Cold arrivals are NOT held behind a slot-blocked warm head: they only
+    need the slot-free ``waiting`` queue, so they pass it (the old ``break``
+    stalled them head-of-line, delaying their arrival into the scheduler's
+    view — and therefore their first prefill — for no resource reason).
+
+    ``admit`` overrides the slot-assignment step (default
+    :func:`try_admit`) so consumers with richer admission state — the
+    async service reserves KV blocks and prefaults warm context — keep the
+    loop's structure (and its engine/planner/service parity) intact.
+    """
+    admit = try_admit if admit is None else admit
+    i = 0
+    warm_blocked = False
+    while i < len(pending) and pending[i].arrived_iter <= it:
+        r = pending[i]
+        if not r.prefill_done:
+            waiting.append(pending.pop(i))
+        elif not warm_blocked and admit(r, free_slots):
+            running.append(pending.pop(i))
         else:
-            waiting.append(r)
+            warm_blocked = True
+            i += 1
 
 
 def complete_prefill(req: ServeRequest, it: int, waiting: list[ServeRequest],
@@ -194,7 +209,18 @@ def plan_rollout(requests: list[ServeRequest], scheduler: Scheduler,
     after the consumer resumes, so at yield time each request still shows
     its pre-iteration state. Idle gaps before future arrivals are skipped
     in O(1).
+
+    ``max_slots`` must be >= 1: with zero slots nothing can ever be
+    admitted, so the loop would spin empty iterations to ``max_iters`` and
+    return a silently truncated (empty) rollout — that is a configuration
+    error, raised loudly here. A rollout that legitimately runs out of
+    ``max_iters`` with work in flight is reported by the consumer
+    (``StreamRollout.truncated``), not hidden.
     """
+    if max_slots < 1:
+        raise ValueError(f"max_slots must be >= 1, got {max_slots}: with "
+                         "no slots nothing can be admitted and the rollout "
+                         "would silently truncate at max_iters")
     pending = sorted(requests, key=lambda r: r.arrived_iter)
     waiting: list[ServeRequest] = []
     running: list[ServeRequest] = []

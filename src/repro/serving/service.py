@@ -97,7 +97,11 @@ class ServiceResult:
 
     def wall_timings(self) -> RequestTimings:
         """Event-time timings from the wall stamps (arrival -> first token
-        -> completion), independent of the iteration schedule."""
+        -> completion), independent of the iteration schedule. The warm
+        mask is the stream's real one (threaded through the measured
+        rollout) — it used to be hardcoded all-cold, which leaked warm
+        decode-resident requests (whose TTFT is undefined) into
+        ``cold_ttft_s`` and skewed measured SLO percentiles."""
         n = len(self.requests)
         arr = np.full(n, np.inf)
         first = np.full(n, np.inf)
@@ -117,8 +121,9 @@ class ServiceResult:
         makespan = float(np.max(done[fin]) - np.min(arr[np.isfinite(arr)])) \
             if fin.any() else 0.0
         return RequestTimings(ttft_s=ttft, tpot_s=tpot, finished=fin,
-                              warm=np.zeros(n, dtype=bool),
-                              makespan_s=makespan)
+                              warm=self.rollout.warm,
+                              makespan_s=makespan,
+                              truncated=self.truncated)
 
     def summary(self) -> dict:
         from .engine import summarize
@@ -210,7 +215,8 @@ class AsyncLLMService:
                 return 0
         return free
 
-    def _admit(self, req: ServeRequest, it: int) -> bool:
+    def _admit(self, req: ServeRequest, it: int,
+               prefault: bool = False) -> bool:
         if req.slot is not None:
             return True
         if not self.free:
@@ -222,7 +228,29 @@ class AsyncLLMService:
         req.slot = self.free.pop()
         self.kv.bind(req.slot, req.rid)
         self._admissions.append((req.rid, req.slot, it))
+        if prefault:
+            self._prefault(req)
         return True
+
+    def _prefault(self, req: ServeRequest) -> None:
+        """Materialise a warm (decode-resident) request's KV residency:
+        run its context through the prefill entry points at admission.
+        Warm requests model a server that already holds this state, so
+        the prefault is a precondition being built, not served work — it
+        runs outside the per-iteration walls (measured iteration seconds
+        time only the scheduled batches) and emits no first token (the
+        warm contract: the first *decode* is the first token). The
+        prefill logits' argmax is kept as the seed token for that first
+        decode."""
+        target = req.prefilled
+        req.prefilled = 0
+        tok = 0
+        while not req.prefill_done:
+            tok = self._run_prefill_chunk(
+                req, len(req.prompt) - req.prefilled)
+        assert req.prefilled == target
+        self._warm_seed[req.rid] = tok
+        stats.bump("warm_prefaults")
 
     # -- producer / engine handshake ---------------------------------------
 
@@ -299,7 +327,10 @@ class AsyncLLMService:
         len_buf[:] = 0
         slot_buf[:] = self.kv.scratch_slot  # pad-lane recurrent-state sink
         for j, r in enumerate(decode):
-            tok_buf[j] = r.generated[-1]
+            # warm requests have no generated token yet at their first
+            # decode: seed with the prefault's final prefill token
+            tok_buf[j] = r.generated[-1] if r.generated \
+                else self._warm_seed[r.rid]
             tbl_buf[j] = self.kv.tables_np[r.slot]
             len_buf[j] = self.kv.lens_np[r.slot]
             slot_buf[j] = r.slot
@@ -330,12 +361,21 @@ class AsyncLLMService:
         rids = [r.rid for r in reqs]
         if len(set(rids)) != len(rids):
             raise ValueError("request ids must be unique")
+        # warm (decode-resident) requests: already prefilled on arrival.
+        # The service materialises their KV state by prefaulting the
+        # context through the prefill entry points at admission, so the
+        # planner's warm abstraction is servable end to end.
+        self._warm_rids = {r.rid for r in reqs
+                           if r.prefill_done and r.slot is None}
+        self._warm_seed: dict[int, int] = {}
+        self._warm_first_b: dict[int, int] = {}
         for r in reqs:
-            if r.prefill_done and r.slot is None:
+            if r.rid in self._warm_rids and \
+                    len(r.prompt) + r.max_new_tokens > self.config.max_len:
                 raise ValueError(
-                    f"request {r.rid} is already prefilled but holds no "
-                    "cache slot; the service cannot serve warm requests — "
-                    "use repro.core.streams.rollout for pure simulation")
+                    f"warm request {r.rid}: context {len(r.prompt)} + "
+                    f"{r.max_new_tokens} new tokens exceeds max_len="
+                    f"{self.config.max_len}")
         # fresh run state (pools persist: stale blocks are masked by length)
         self.kv.allocator = BlockAllocator(self.kv.allocator.num_blocks,
                                            self.kv.block_len)
@@ -388,8 +428,15 @@ class AsyncLLMService:
                     continue
                 pending.append(await self._queue.get())
                 continue
-            admit_arrivals(pending, waiting, running, self.free, it)
+            # warm arrivals admit through the shared loop with the
+            # service's richer admission (block reservation + context
+            # prefault) substituted for the planner's bare try_admit;
+            # the blocked counter resets FIRST so a block-starved warm
+            # head shows up in this iteration's stats
             self._iter_blocked = 0
+            admit_arrivals(pending, waiting, running, self.free, it,
+                           admit=lambda r, _f: self._admit(r, it,
+                                                           prefault=True))
             free_eff = self._schedulable_slots(waiting)
             plan = scheduler.plan(waiting, running, free_eff)
             prefill = [(q, n) for q, n in plan.prefill
@@ -413,6 +460,14 @@ class AsyncLLMService:
                      for q, n in plan.prefill]
             batch += [Request(DECODE, 1, r.prefilled + len(r.generated))
                       for r in plan.decode]
+            # warm first-token convention (the planner's): a warm
+            # request's first scheduled decode is its first token
+            newly_first_warm = [
+                r.rid for r in plan.decode
+                if r.rid in self._warm_rids
+                and r.rid not in self._warm_first_b]
+            for rid in newly_first_warm:
+                self._warm_first_b[rid] = len(batches)
             t0 = time.perf_counter()
             n_prefill_tok = 0
             for req, chunk_len in plan.prefill:
@@ -424,6 +479,8 @@ class AsyncLLMService:
                     self._stamp(req.rid, "first_s")
             if plan.decode:
                 self._run_decode(plan.decode)
+                for rid in newly_first_warm:
+                    self._stamp(rid, "first_s")
             owned = {r.rid: r.slot for r in running}
             n_done = len(finished)
             retire_finished(running, finished, self.free, it)
@@ -477,9 +534,16 @@ class AsyncLLMService:
         first_b = np.full(n, -1, dtype=int)
         done_b = np.full(n, -1, dtype=int)
         ntok = np.zeros(n, dtype=int)
+        warm = np.asarray([r.rid in self._warm_rids for r in reqs],
+                          dtype=bool)
         for r in reqs:
             i = idx[r.rid]
-            if r.first_token_iter is not None:
+            if r.rid in self._warm_first_b:
+                # warm: first scheduled decode (first_token_iter stays
+                # None for requests that never prefilled — the planner's
+                # convention, mirrored by repro.core.streams.rollout)
+                first_b[i] = self._warm_first_b[r.rid]
+            elif r.first_token_iter is not None:
                 first_b[i] = it_to_b[r.first_token_iter]
             if r.done_iter is not None:
                 done_b[i] = it_to_b[r.done_iter]
@@ -493,7 +557,8 @@ class AsyncLLMService:
             first_b=first_b,
             done_b=done_b,
             n_new_tokens=ntok,
-            warm=np.zeros(n, dtype=bool),
+            warm=warm,
+            truncated=any(r.done_iter is None for r in reqs),
         )
 
     def _counters_snapshot(self) -> dict:
@@ -502,6 +567,7 @@ class AsyncLLMService:
             "blocks_peak_used": self.kv.allocator.peak_used,
             "oom_events": self.kv.allocator.oom_events,
             "admissions": len(self._admissions),
+            "warm_requests": len(self._warm_rids),
             "transfer_pool_hits": self.xfer.hits,
             "transfer_pool_misses": self.xfer.misses,
             "prefill_entrypoints": sorted(self._prefill_fns),
@@ -537,16 +603,21 @@ def service_requests(stream: RequestStream, vocab: int,
                      seed: int = 0) -> list[ServeRequest]:
     """Materialise a stream into servable requests with real token prompts
     (rid = sample index, so planner-side ``rollout`` of the same stream is
-    directly comparable)."""
+    directly comparable). Warm (decode-resident) requests become
+    already-prefilled ``ServeRequest``\\ s whose prompt is their context
+    snapshot (length ``warm_context``, matching the planner's serve list);
+    the service prefaults that context into KV at admission."""
     rng = np.random.default_rng(seed)
     out = []
     for i, s in enumerate(stream.sample()):
         if s.warm:
-            raise ValueError(
-                "warm (decode-resident) requests are a pure-rollout "
-                "modeling device; the service has no KV state for them")
-        plen = max(s.prompt_len, 1)
-        out.append(ServeRequest(
-            i, rng.integers(0, vocab, size=plen).tolist(),
-            s.max_new_tokens, arrived_iter=s.arrival_iter))
+            out.append(ServeRequest(
+                i, rng.integers(0, vocab, size=s.warm_context).tolist(),
+                s.max_new_tokens, prefilled=s.warm_context,
+                arrived_iter=s.arrival_iter))
+        else:
+            plen = max(s.prompt_len, 1)
+            out.append(ServeRequest(
+                i, rng.integers(0, vocab, size=plen).tolist(),
+                s.max_new_tokens, arrived_iter=s.arrival_iter))
     return out

@@ -1,0 +1,381 @@
+"""Fleet-level serving control plane.
+
+Keystone (acceptance-pinned): a 1-replica fleet serves bit-identically to
+the unsplit stream — router split, replica serve and timing merge must
+all vanish at N=1, in both the planned and the measured path. Plus:
+routing policies are deterministic and rate-invariant (PR 5's contract
+survives the split), split/merge validate their inputs, fleet accounting
+sums dollars and takes the max makespan, and the scale-out policy search
+prefers the right action under underload / overload / truncation.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.objectives import GoodputPerDollar, GoodputUnderSLO
+from repro.core.streams import (
+    RequestStream,
+    StreamRequest,
+    merge_timings,
+    rollout,
+    split_stream,
+)
+from repro.core.traces import SHAREGPT
+from repro.fleet import (
+    Fleet,
+    MeasuredReplica,
+    PlannedReplica,
+    assign,
+    plan_scale_out,
+    route_stream,
+    unit_pricer,
+)
+from repro.serving.scheduler import get_scheduler
+
+STREAM = RequestStream("fleet-mix", trace=SHAREGPT, rate=2.0, n_requests=24,
+                       warm_fraction=0.25, max_new_tokens_cap=16, seed=7)
+SLOTS, ITERS = 4, 4096
+
+
+def _replica(name="r0", mc=3.0, **kw):
+    kw.setdefault("pricer", unit_pricer())
+    kw.setdefault("scheduler", "orca")
+    kw.setdefault("max_slots", SLOTS)
+    kw.setdefault("max_iters", ITERS)
+    return PlannedReplica(mc_total=mc, name=name, **kw)
+
+
+def _fleet(n, policy="round_robin", **kw):
+    return Fleet([_replica(f"r{i}", **kw) for i in range(n)], policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Keystone: 1-replica fleet == unsplit serve, bit for bit
+# ---------------------------------------------------------------------------
+
+class TestOneReplicaParity:
+
+    @pytest.mark.parametrize("policy", ["round_robin", "least_loaded",
+                                        "slo_class"])
+    def test_merged_timings_bit_identical_to_unsplit(self, policy):
+        """THE acceptance invariant: route -> serve -> merge at N=1 equals
+        rolling out and pricing the unsplit stream, bitwise, under every
+        routing policy."""
+        fr = Fleet([_replica()], policy=policy).serve(STREAM)
+        ro = rollout(STREAM, get_scheduler("orca"), max_slots=SLOTS,
+                     max_iters=ITERS)
+        direct = ro.timings(unit_pricer()(ro))
+        np.testing.assert_array_equal(fr.timings.ttft_s, direct.ttft_s)
+        np.testing.assert_array_equal(fr.timings.tpot_s, direct.tpot_s)
+        np.testing.assert_array_equal(fr.timings.finished, direct.finished)
+        np.testing.assert_array_equal(fr.timings.warm, direct.warm)
+        assert fr.timings.makespan_s == direct.makespan_s
+        assert fr.timings.truncated == direct.truncated
+        # and the replica saw the identical rollout
+        assert fr.replica_results[0].rollout.batches == ro.batches
+
+    def test_one_replica_score_matches_direct_objective(self):
+        """Fleet goodput-per-dollar at N=1 equals scoring the unsplit
+        timings with the GoodputPerDollar objective directly."""
+        fr = Fleet([_replica(mc=3.0)]).serve(STREAM)
+        ro = rollout(STREAM, get_scheduler("orca"), max_slots=SLOTS,
+                     max_iters=ITERS)
+        obj = GoodputPerDollar(ttft_slo_s=0.5, tpot_slo_s=0.1)
+        direct = -obj.score(0.0, 0.0, mc=3.0,
+                            timings=ro.timings(unit_pricer()(ro)))
+        assert fr.goodput_per_dollar(obj) == direct
+
+
+# ---------------------------------------------------------------------------
+# Routing: determinism, rate-invariance, policy semantics
+# ---------------------------------------------------------------------------
+
+class TestRouting:
+
+    @pytest.mark.parametrize("policy", ["round_robin", "least_loaded",
+                                        "slo_class"])
+    def test_assignment_rate_invariant(self, policy):
+        """PR 5's contract through the router: re-rating the stream keeps
+        the assignment AND every per-replica sub-population bit-identical
+        (only arrival iterations move)."""
+        base = route_stream(STREAM, 3, policy)
+        for rate in (0.25, 8.0, 64.0):
+            rerated = route_stream(STREAM.with_rate(rate), 3, policy)
+            np.testing.assert_array_equal(base.assignment, rerated.assignment)
+            for s_lo, s_hi in zip(base.substreams, rerated.substreams):
+                for a, b in zip(s_lo.sample(), s_hi.sample()):
+                    assert (a.prompt_len, a.max_new_tokens,
+                            a.warm_context) == \
+                        (b.prompt_len, b.max_new_tokens, b.warm_context)
+
+    def test_round_robin_assignment(self):
+        reqs = STREAM.sample()
+        np.testing.assert_array_equal(
+            assign(reqs, 3, "round_robin"), np.arange(len(reqs)) % 3)
+
+    def test_least_loaded_balances_token_work(self):
+        """Greedy work balancing: per-replica token work spreads far
+        tighter than round-robin's on a heavy-tailed trace."""
+        reqs = STREAM.sample()
+
+        def work(r):
+            return r.max_new_tokens if r.warm \
+                else r.prompt_len + r.max_new_tokens
+
+        def spread(a):
+            loads = np.zeros(3)
+            for i, r in enumerate(reqs):
+                loads[a[i]] += work(r)
+            return loads.max() - loads.min()
+
+        assert spread(assign(reqs, 3, "least_loaded")) < \
+            spread(assign(reqs, 3, "round_robin"))
+
+    def test_slo_class_isolates_warm_from_cold(self):
+        """With replicas to spare, warm (resident) and cold (interactive)
+        requests land on disjoint replica sets — class isolation."""
+        reqs = STREAM.sample()
+        a = assign(reqs, 4, "slo_class")
+        warm = np.asarray([r.warm for r in reqs])
+        assert not set(a[warm].tolist()) & set(a[~warm].tolist())
+
+    def test_slo_class_fewer_replicas_than_classes_shares(self):
+        reqs = STREAM.sample()
+        a = assign(reqs, 1, "slo_class")
+        np.testing.assert_array_equal(a, np.zeros(len(reqs), dtype=int))
+
+    def test_validation(self):
+        reqs = STREAM.sample()
+        with pytest.raises(ValueError, match="at least one replica"):
+            assign(reqs, 0, "round_robin")
+        with pytest.raises(ValueError, match="unknown routing policy"):
+            assign(reqs, 2, "random")
+        from repro.core.workload import PREFILL, Request
+        fixed = RequestStream.fixed_batches([[Request(PREFILL, 8, 8)]])
+        with pytest.raises(ValueError, match="fixed-batch"):
+            route_stream(fixed, 2)
+
+
+# ---------------------------------------------------------------------------
+# split/merge mechanics
+# ---------------------------------------------------------------------------
+
+class TestSplitMerge:
+
+    def test_split_partitions_and_indices_invert(self):
+        ra = route_stream(STREAM, 3, "least_loaded")
+        all_ix = np.concatenate(ra.indices)
+        assert sorted(all_ix.tolist()) == list(range(STREAM.n_requests))
+        reqs = STREAM.sample()
+        for sub, ix in zip(ra.substreams, ra.indices):
+            assert [r.prompt_len for r in sub.sample()] == \
+                [reqs[j].prompt_len for j in ix]
+
+    def test_split_validation(self):
+        with pytest.raises(ValueError, match="shape"):
+            split_stream(STREAM, [0, 1], 2)
+        with pytest.raises(ValueError, match=r"\[0, 2\)"):
+            split_stream(STREAM, [5] * STREAM.n_requests, 2)
+
+    def test_merge_validation(self):
+        ra = route_stream(STREAM, 2, "round_robin")
+        parts = [Fleet([_replica()]).serve(sub).timings
+                 for sub in ra.substreams]
+        with pytest.raises(ValueError, match="overlap"):
+            merge_timings(parts, [ra.indices[0], ra.indices[0]],
+                          STREAM.n_requests)
+        with pytest.raises(ValueError, match="index set"):
+            merge_timings(parts, [ra.indices[0], ra.indices[1][:-1]],
+                          STREAM.n_requests)
+
+    def test_uncovered_requests_read_unserved(self):
+        """A request no part covers merges to inf TTFT/TPOT, unfinished —
+        never a silently healthy zero."""
+        ra = route_stream(STREAM, 2, "round_robin")
+        sub = ra.substreams[0]
+        ro = rollout(sub, get_scheduler("orca"), max_slots=SLOTS,
+                     max_iters=ITERS)
+        t = ro.timings(unit_pricer()(ro))
+        merged = merge_timings([t], [ra.indices[0]], STREAM.n_requests)
+        missing = np.ones(STREAM.n_requests, dtype=bool)
+        missing[ra.indices[0]] = False
+        assert np.isinf(merged.ttft_s[missing]).all()
+        assert np.isinf(merged.tpot_s[missing]).all()
+        assert not merged.finished[missing].any()
+
+    def test_empty_substream_serves_cleanly(self):
+        """A replica assigned zero requests (possible under slo_class)
+        yields an empty, non-truncated rollout and merges as a no-op."""
+        sub, ix = split_stream(STREAM, np.ones(STREAM.n_requests, int), 2)
+        assert sub[0].n_requests == 0
+        res = _replica().serve(sub[0])
+        assert not res.truncated
+        assert res.timings.ttft_s.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# Fleet accounting
+# ---------------------------------------------------------------------------
+
+class TestFleetAccounting:
+
+    def test_mc_sums_and_makespan_is_max(self):
+        fr = _fleet(3, mc=2.5).serve(STREAM)
+        assert fr.mc_total == 7.5
+        assert fr.timings.makespan_s == max(
+            r.timings.makespan_s for r in fr.replica_results)
+
+    def test_every_request_served_exactly_once(self):
+        for policy in ("round_robin", "least_loaded", "slo_class"):
+            fr = _fleet(3, policy=policy).serve(STREAM)
+            assert fr.timings.finished.all()
+            assert np.isfinite(fr.timings.cold_ttft_s).all()
+
+    def test_heterogeneous_fleet_dollars(self):
+        """Replicas may carry different hardware costs (heterogeneous
+        fleet): the denominator is their sum."""
+        fleet = Fleet([_replica("big", mc=10.0),
+                       _replica("small", mc=1.0, max_slots=2)])
+        fr = fleet.serve(STREAM)
+        assert fr.mc_total == 11.0
+        assert {r.replica for r in fr.replica_results} == {"big", "small"}
+
+    def test_summary_record_is_json_ready(self):
+        import json
+        fr = _fleet(2).serve(STREAM)
+        rec = fr.summary()
+        json.dumps(rec)
+        assert rec["n_replicas"] == 2
+        assert sum(rec["loads"]) == STREAM.n_requests
+        assert rec["ttft_p99_s"] > 0 and rec["tpot_p50_s"] > 0
+
+    def test_goodput_positive_and_scales(self):
+        one = Fleet([_replica(mc=1.0)]).serve(STREAM.with_rate(16.0))
+        three = _fleet(3, mc=1.0).serve(STREAM.with_rate(16.0))
+        obj = GoodputUnderSLO(ttft_slo_s=0.25, tpot_slo_s=0.05)
+        assert three.goodput(obj) > one.goodput(obj) > 0
+
+
+# ---------------------------------------------------------------------------
+# Scale-out policy search
+# ---------------------------------------------------------------------------
+
+OVERLOAD = RequestStream("overload", trace=SHAREGPT, rate=1.0, n_requests=32,
+                         max_new_tokens_cap=8, seed=3)
+
+
+def _small_fleet(max_iters=ITERS):
+    return Fleet([PlannedReplica(pricer=unit_pricer(), scheduler="orca",
+                                 max_slots=2, max_iters=max_iters,
+                                 mc_total=1.0, name="r0")])
+
+
+class TestScaleOut:
+
+    def test_underload_keeps(self):
+        """At trickle load every request meets generous SLOs on one
+        replica: a second replica doubles the dollars for nothing."""
+        dec = plan_scale_out(
+            _small_fleet(), OVERLOAD, rate=0.05,
+            objective=GoodputUnderSLO(ttft_slo_s=5.0, tpot_slo_s=1.0))
+        assert dec.best.action == "keep"
+
+    def test_overload_adds_replica(self):
+        """Queueing at high offered load blows the TTFT SLO on one replica;
+        splitting the stream restores goodput faster than the second
+        replica's dollars dilute it."""
+        dec = plan_scale_out(
+            _small_fleet(), OVERLOAD, rate=8.0,
+            objective=GoodputUnderSLO(ttft_slo_s=0.5, tpot_slo_s=0.05))
+        assert dec.best.action == "add_replica"
+        by = {o.action: o for o in dec.options}
+        assert by["add_replica"].score > by["keep"].score > 0
+
+    def test_truncated_option_refused(self):
+        """A horizon too short for the single replica: its serve truncates
+        and MUST score -inf (pricing a shortened schedule would reward
+        dropping work), while the 2-replica option finishes and wins."""
+        dec = plan_scale_out(
+            _small_fleet(max_iters=100), OVERLOAD, rate=32.0,
+            objective=GoodputUnderSLO(ttft_slo_s=5.0, tpot_slo_s=1.0))
+        by = {o.action: o for o in dec.options}
+        assert by["keep"].score == float("-inf")
+        assert "truncated" in by["keep"].note
+        assert dec.best.action == "add_replica"
+
+    def test_scheduler_swap_and_resume_options(self):
+        dec = plan_scale_out(
+            _small_fleet(), OVERLOAD, rate=8.0,
+            objective=GoodputUnderSLO(ttft_slo_s=0.5, tpot_slo_s=0.05),
+            schedulers=("vllm", "chunked_prefill"),
+            re_search=lambda rep, res: dataclasses.replace(
+                rep, name=f"{rep.name}'"))
+        actions = [o.action for o in dec.options]
+        assert actions == ["keep", "scheduler:vllm",
+                           "scheduler:chunked_prefill", "re_search",
+                           "add_replica"]
+        assert all(np.isfinite(o.score) for o in dec.options)
+        rec = dec.record()
+        assert rec["best"] == dec.best.action
+        assert len(rec["options"]) == 5
+
+    def test_decision_record_is_json_ready(self):
+        import json
+        dec = plan_scale_out(
+            _small_fleet(), OVERLOAD, rate=2.0,
+            objective=GoodputUnderSLO(ttft_slo_s=0.5, tpot_slo_s=0.05))
+        json.dumps(dec.record())
+
+
+# ---------------------------------------------------------------------------
+# Measured path: 1-replica fleet over the real service
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_measured_one_replica_fleet_parity():
+    """The keystone holds through the REAL service too: a 1-replica fleet
+    wrapping AsyncLLMService merges to timings bit-identical to serving
+    the unsplit stream directly (which in turn is planner-bit-identical —
+    tests/test_service_parity.py)."""
+    import jax
+
+    from repro.configs import all_archs
+    from repro.models import init_model
+    from repro.serving import AsyncLLMService, ServiceConfig
+    from repro.serving.service import service_requests
+
+    cfg = all_archs()["qwen1.5-0.5b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    stream = RequestStream.from_requests(
+        [StreamRequest(10, 3, 0), StreamRequest(6, 2, 1, warm_context=9),
+         StreamRequest(8, 4, 2)], name="measured-fleet")
+
+    def make_service():
+        return AsyncLLMService(
+            params, cfg, ServiceConfig(max_batch=3, max_len=64,
+                                       block_len=16))
+
+    rep = MeasuredReplica(service=make_service, vocab=cfg.vocab,
+                          scheduler="orca", mc_total=2.0, name="m0")
+    fr = Fleet([rep]).serve(stream)
+    direct = make_service().serve_sync(
+        service_requests(stream, cfg.vocab), get_scheduler("orca"),
+        stream_name=stream.name)
+    # the measured SCHEDULE is deterministic (wall seconds per iteration
+    # are not): compare the replica's rollout bitwise and price both
+    # schedules with one common latency vector
+    ro = fr.replica_results[0].rollout
+    assert ro.batches == direct.rollout.batches
+    np.testing.assert_array_equal(ro.warm, direct.rollout.warm)
+    np.testing.assert_array_equal(ro.first_b, direct.rollout.first_b)
+    np.testing.assert_array_equal(ro.done_b, direct.rollout.done_b)
+    lat = np.linspace(0.01, 0.02, len(ro.batches))
+    merged = merge_timings([ro.timings(lat)], fr.route.indices,
+                           stream.n_requests)
+    dt = direct.timings(lat)
+    np.testing.assert_array_equal(merged.ttft_s, dt.ttft_s)
+    np.testing.assert_array_equal(merged.tpot_s, dt.tpot_s)
+    np.testing.assert_array_equal(merged.warm, dt.warm)
+    assert merged.makespan_s == dt.makespan_s
+    assert fr.mc_total == 2.0

@@ -181,3 +181,36 @@ def test_refinement_terminates_under_probe_budget(seed, n_coarse,
     assert res.points[-1].rate >= res.points[0].rate
     # the reported knee is one of the priced points
     assert any(p.rate == res.knee_rate for p in res.points)
+
+
+def test_sweep_knee_fixed_grid_bookkeeping():
+    """``sweep_knee`` (the fleet frontier's no-refinement sweep) shares
+    ``refine_knee``'s knee conventions: plateau ties to the highest rate,
+    boundary peaks flagged saturated, bracket = grid neighbours — but
+    never probes beyond the given grid."""
+    from repro.core.frontier import sweep_knee
+    calls = []
+
+    def evaluate(rate):
+        calls.append(rate)
+        return _unimodal(4.0)(rate)
+
+    res = sweep_knee(evaluate, [1.0, 2.0, 4.0, 8.0, 16.0])
+    assert calls == [1.0, 2.0, 4.0, 8.0, 16.0]     # one probe per rate
+    assert res.knee_rate == 4.0
+    assert res.bracket == (2.0, 8.0)
+    assert not res.knee_saturated
+    assert res.probes == 0 and not res.converged
+
+    # peak on the high boundary: flagged, never extended
+    res = sweep_knee(_unimodal(100.0), [1.0, 2.0, 4.0])
+    assert res.knee_rate == 4.0 and res.knee_saturated
+
+    # plateau ties break to the highest rate
+    res = sweep_knee(lambda r: (1.0, {}), [1.0, 2.0, 4.0])
+    assert res.knee_rate == 4.0 and res.knee_saturated
+
+    with pytest.raises(ValueError):
+        sweep_knee(_unimodal(4.0), [])
+    with pytest.raises(ValueError):
+        sweep_knee(_unimodal(4.0), [0.0, 1.0])

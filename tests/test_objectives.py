@@ -142,3 +142,35 @@ def test_stream_objective_end_to_end_scoring():
         0, 0, timings=ro.timings(out.batch_latencies))
     assert score == pytest.approx(expect)
     assert np.isfinite(score) and score > 0
+
+
+def test_goodput_per_dollar_flags_and_inner():
+    from repro.core.objectives import GoodputPerDollar
+    obj = get_objective("goodput_per_dollar")
+    assert isinstance(obj, GoodputPerDollar)
+    assert obj.uses_mc and obj.requires_stream
+    inner = obj.inner()
+    assert isinstance(inner, GoodputUnderSLO) and not inner.uses_mc
+    assert inner.ttft_slo_s == obj.ttft_slo_s
+    assert inner.tpot_slo_s == obj.tpot_slo_s
+    # MC-bearing: the mapping search must reject it (like edp_mc)
+    with pytest.raises(ValueError, match="inner"):
+        search_mapping(SPEC, [[prefill_request(8)]],
+                       random_point(np.random.default_rng(0),
+                                    64).to_config(64),
+                       [1], GAConfig(population=4, generations=1),
+                       objective=obj)
+
+
+def test_goodput_per_dollar_score_divides_by_mc():
+    from repro.core.objectives import GoodputPerDollar
+    reqs = [StreamRequest(8, 4, 0), StreamRequest(8, 4, 1)]
+    ro = rollout(RequestStream.from_requests(reqs), get_scheduler("orca"),
+                 max_slots=2)
+    t = ro.timings(np.full(len(ro.batches), 0.01))
+    obj = GoodputPerDollar(ttft_slo_s=10.0, tpot_slo_s=10.0)
+    base = obj.inner().score(0.0, 0.0, timings=t)
+    assert obj.score(0.0, 0.0, mc=4.0, timings=t) == base / 4.0
+    assert base < 0                       # negated goodput, all within SLO
+    with pytest.raises(ValueError, match="positive"):
+        obj.score(0.0, 0.0, mc=0.0, timings=t)

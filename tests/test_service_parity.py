@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import all_archs
-from repro.core.streams import rollout
+from repro.core.streams import RequestStream, StreamRequest, rollout
 from repro.models import init_model
 from repro.serving import (
     SCHEDULERS,
@@ -147,12 +147,52 @@ def test_service_truncation_reports_unfinished():
     assert res.summary()["unfinished"] == len(res.unfinished)
 
 
-def test_service_rejects_warm_requests():
-    svc = AsyncLLMService(PARAMS, CFG,
-                          ServiceConfig(max_batch=2, max_len=MAX_LEN))
-    warm = ServeRequest(0, [1] * 8, 4, prefilled=8)
-    with pytest.raises(ValueError, match="warm"):
-        svc.serve_sync([warm], _sched("orca"))
+def _warm_mixed_stream():
+    """Cold and warm (decode-resident) arrivals interleaved, with slot
+    contention (4 requests, 3 slots)."""
+    reqs = [
+        StreamRequest(10, 3, 0),
+        StreamRequest(6, 2, 1, warm_context=9),
+        StreamRequest(8, 4, 2),
+        StreamRequest(5, 3, 2, warm_context=14),
+    ]
+    return RequestStream.from_requests(reqs, name="warm-mixed")
+
+
+def test_warm_mixed_service_parity_and_warm_mask():
+    """Regression (warm-mask loss): the service used to hardcode
+    ``warm=zeros`` in its measured rollout and wall timings, leaking warm
+    decode-resident requests — whose TTFT is undefined — into
+    ``cold_ttft_s``. Warm requests now ride the measured path (context
+    prefaulted into KV at admission) and the measured schedule, warm mask
+    included, must equal the planner's bit for bit."""
+    stream = _warm_mixed_stream()
+    svc = AsyncLLMService(
+        PARAMS, CFG,
+        ServiceConfig(max_batch=MAX_BATCH, max_len=MAX_LEN, block_len=16))
+    res = svc.serve_sync(service_requests(stream, CFG.vocab),
+                         _sched("orca"), stream_name=stream.name)
+    assert not res.truncated and not res.unfinished
+    assert res.counters["warm_requests"] == 2
+    ro = rollout(stream, _sched("orca"), max_slots=MAX_BATCH,
+                 max_iters=10_000)
+    assert res.rollout.batches == ro.batches
+    np.testing.assert_array_equal(res.rollout.warm, ro.warm)
+    np.testing.assert_array_equal(res.rollout.arrival_b, ro.arrival_b)
+    np.testing.assert_array_equal(res.rollout.first_b, ro.first_b)
+    np.testing.assert_array_equal(res.rollout.done_b, ro.done_b)
+    np.testing.assert_array_equal(res.rollout.n_new_tokens, ro.n_new_tokens)
+    lat = np.linspace(0.01, 0.02, len(ro.batches))
+    planned, measured = ro.timings(lat), res.timings(lat)
+    np.testing.assert_array_equal(planned.ttft_s, measured.ttft_s)
+    np.testing.assert_array_equal(planned.tpot_s, measured.tpot_s)
+    # the warm mask is real, so cold_ttft_s excludes the warm requests
+    assert measured.warm.sum() == 2
+    assert measured.cold_ttft_s.shape[-1] == 2
+    assert np.isfinite(measured.cold_ttft_s).all()
+    wall = res.wall_timings()
+    np.testing.assert_array_equal(wall.warm, ro.warm)
+    assert wall.cold_ttft_s.shape[-1] == 2
 
 
 def test_occupancy_stats_and_counters(served):
@@ -209,3 +249,31 @@ def test_mamba_service_matches_engine():
         fin, _ = eng.run(reqs, _sched("orca"))
     assert {r.rid: r.generated for r in fin} == \
         {r.rid: r.generated for r in res.finished}
+
+
+def test_cold_passes_block_starved_warm_head():
+    """Regression (service head-of-line blocking): a warm request whose
+    context cannot reserve its KV blocks used to pin every later cold
+    arrival in the pending queue. The cold request must be admitted past
+    the blocked warm head (warm admission waits for blocks; cold work
+    proceeds), and everything still finishes uncorrupted."""
+    svc = AsyncLLMService(
+        PARAMS, CFG,
+        ServiceConfig(max_batch=MAX_BATCH, max_len=MAX_LEN, block_len=16,
+                      num_blocks=4))        # 3 usable blocks = 48 tokens
+    reqs = [
+        # cold R0: demand 24 tokens (2 blocks), admitted at iter 0
+        ServeRequest(0, list(range(20)), 4, arrived_iter=0),
+        # warm W: demand 43 tokens (3 blocks) -> blocked behind R0
+        ServeRequest(1, list(range(40)), 3, prefilled=40, arrived_iter=1),
+        # cold C: demand 10 tokens (1 block) -> must pass W
+        ServeRequest(2, list(range(8)), 2, arrived_iter=2),
+    ]
+    res = svc.serve_sync(reqs, _sched("orca"))
+    assert not res.truncated and len(res.finished) == 3
+    admitted = {rid: it for rid, _slot, it in res.admissions}
+    assert admitted[2] < admitted[1], (
+        "cold request must not wait behind the block-starved warm head: "
+        f"admissions {res.admissions}")
+    assert sum(s.blocked_admissions for s in res.stats) > 0
+    assert res.counters["warm_requests"] == 1

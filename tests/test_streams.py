@@ -191,3 +191,86 @@ def test_fixed_stream_rollout_is_synthetic():
     assert ro.synthetic
     assert ro.batches == batches
     assert ro.timings(np.ones(2)).synthetic
+
+
+# --------------------------------------------------------------------------
+# Rollout truncation, slot validation, late arrivals, admission order
+# --------------------------------------------------------------------------
+
+
+def test_rollout_truncated_flag():
+    """``StreamRollout.truncated`` marks a horizon that ran out with work
+    in flight — and threads through to the timings — while a rollout that
+    drains cleanly stays unflagged."""
+    reqs = [StreamRequest(4, 50)]
+    cut = rollout(RequestStream.from_requests(reqs), get_scheduler("orca"),
+                  max_slots=1, max_iters=5)
+    assert cut.truncated
+    assert cut.timings(np.ones(len(cut.batches))).truncated
+    done = rollout(RequestStream.from_requests(reqs), get_scheduler("orca"),
+                   max_slots=1, max_iters=10_000)
+    assert not done.truncated
+    assert not done.timings(np.ones(len(done.batches))).truncated
+
+
+def test_plan_rollout_zero_slots_raises():
+    """Regression: ``max_slots < 1`` used to spin empty iterations to
+    ``max_iters`` and return a silently truncated rollout; it is a
+    configuration error and must raise."""
+    reqs = [ServeRequest(0, [0] * 4, 2)]
+    for bad in (0, -1):
+        with pytest.raises(ValueError, match="max_slots"):
+            list(plan_rollout(reqs, get_scheduler("orca"), bad, 100))
+
+
+def test_late_arrival_past_horizon_clamps_no_oob():
+    """Regression: a request arriving AFTER the last executed batch has
+    ``arrival_b == len(batches)`` — one past the cumulative-latency index
+    range. ``timings`` must clamp (the request is unserved, so TTFT is inf
+    either way), not raise IndexError — and the independent
+    ``priced_rollout`` reference must agree."""
+    from repro.serving.scheduler import priced_rollout
+    reqs = [StreamRequest(4, 2, arrival_iter=0),
+            StreamRequest(4, 2, arrival_iter=100)]   # beyond max_iters
+    stream = RequestStream.from_requests(reqs)
+    ro = rollout(stream, get_scheduler("orca"), max_slots=1, max_iters=5)
+    assert ro.truncated                    # the late request never served
+    assert ro.arrival_b[1] == len(ro.batches)   # the OOB-prone index
+    lat = np.linspace(0.01, 0.02, len(ro.batches))
+    t = ro.timings(lat)                    # must not raise
+    assert np.isinf(t.ttft_s[1]) and np.isinf(t.tpot_s[1])
+    assert not t.finished[1]
+    assert np.isfinite(t.ttft_s[0])
+    ref = priced_rollout(
+        [ServeRequest(0, [0] * 4, 2, arrived_iter=0),
+         ServeRequest(1, [0] * 4, 2, arrived_iter=100)],
+        get_scheduler("orca"), 1, lat, max_iters=5)
+    np.testing.assert_array_equal(t.ttft_s, ref["ttft_s"])
+    np.testing.assert_array_equal(t.tpot_s, ref["tpot_s"])
+    np.testing.assert_array_equal(t.finished, ref["finished"])
+    # leading (population) axes clamp identically
+    t2 = ro.timings(np.stack([lat, 2 * lat]))
+    assert np.isinf(t2.ttft_s[:, 1]).all()
+    np.testing.assert_array_equal(t2.ttft_s[0], t.ttft_s)
+
+
+def test_cold_arrivals_pass_slot_blocked_warm_head():
+    """Regression (head-of-line blocking): ``admit_arrivals`` used to stop
+    at the first warm request it could not admit, so cold arrivals queued
+    behind a blocked warm head never reached the scheduler's waiting
+    queue. Cold arrivals must pass the blocked head; warm ordering stays
+    FIFO (a later warm request must NOT leapfrog the blocked one)."""
+    from repro.serving.scheduler import admit_arrivals
+    w1 = ServeRequest(0, [0] * 8, 4, prefilled=8, arrived_iter=0)
+    w2 = ServeRequest(1, [0] * 8, 4, prefilled=8, arrived_iter=0)
+    cold = ServeRequest(2, [0] * 4, 2, arrived_iter=0)
+    pending = [w1, cold, w2]
+    waiting, running, free = [], [], []        # no slots: w1 blocks
+    admit_arrivals(pending, waiting, running, free, 0)
+    assert waiting == [cold]                   # cold passed the warm head
+    assert pending == [w1, w2]                 # warm stay FIFO, in order
+    assert running == []
+    # a slot frees: the blocked warm head is admitted first, w2 stays
+    free = [0]
+    admit_arrivals(pending, waiting, running, free, 0)
+    assert running == [w1] and pending == [w2] and free == []
