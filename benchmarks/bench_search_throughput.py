@@ -100,7 +100,7 @@ def bench_eval_throughput(graphs, tables, hw, population: int, n_gens: int,
     evs = [PopulationEvaluator(g, t, hw) for g, t in zip(graphs, tables)]
 
     def legacy_generation():
-        for i, ev in enumerate(evs):
+        for _i, ev in enumerate(evs):
             orders = np.stack([enc.scheduled_order() for enc in pop_list])
             l2cs = np.stack([enc.layer_to_chip for enc in pop_list])
             lat, *_ = _population_pass(jnp.asarray(orders),
@@ -276,6 +276,76 @@ def bench_fused_kernel(graphs, tables, hw, populations, n_gens: int,
         ) if host != "tpu" else (
             "walls measured on the compiled TPU megakernel (grid order "
             "autotuned per shape)"),
+    }
+
+
+def bench_verify_overhead(graphs, tables, hw, ga_cfg, warmup: int = 1):
+    """GA throughput with vs without the ``GAConfig(verify=True)``
+    legality pre-filter (``repro.analysis.population_legal_mask`` over
+    every bred generation), plus the standalone mask sweep cost. The GA
+    operators are closed over the legal space, so the filter rejects
+    nothing here and the two runs must score identically — the delta is
+    pure analyzer overhead."""
+    import numpy as np
+    from repro.analysis import population_legal_mask
+    from repro.core.compass import _make_population_eval
+    from repro.core.encoding import StackedPopulation, random_encoding
+    from repro.core.ga import GAConfig, ga_search
+
+    group_eval = _make_population_eval(graphs, tables, hw, None)
+
+    def eval_fn(pop):
+        lat, en = group_eval(pop)
+        return np.asarray(lat * en).mean(axis=0)
+
+    eval_fn.accepts_stacked = True
+    rows, m_cols = graphs[0].rows, graphs[0].n_cols
+
+    walls, results = {}, {}
+    for label, verify in (("verify_off", False), ("verify_on", True)):
+        cfg = GAConfig(population=ga_cfg.population,
+                       generations=ga_cfg.generations, seed=0,
+                       verify=verify)
+        for _ in range(max(warmup, 1)):                   # compile + warm
+            ga_search(eval_fn, rows, m_cols, hw.n_chiplets,
+                      GAConfig(population=cfg.population, generations=1,
+                               seed=0, verify=verify))
+        t0 = time.perf_counter()
+        results[label] = ga_search(eval_fn, rows, m_cols, hw.n_chiplets,
+                                   cfg)
+        walls[label] = time.perf_counter() - t0
+    assert results["verify_on"].best_score == \
+        results["verify_off"].best_score, \
+        "verify pre-filter changed the search (expected bit-identity)"
+
+    # standalone mask throughput at a paper-scale population
+    rng = np.random.default_rng(0)
+    big = StackedPopulation.from_encodings(
+        [random_encoding(rng, rows, m_cols, hw.n_chiplets)
+         for _ in range(2048)])
+    population_legal_mask(big, hw.n_chiplets)             # warm
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        mask = population_legal_mask(big, hw.n_chiplets)
+    t_mask = (time.perf_counter() - t0) / reps
+    assert mask.all()
+
+    gens = ga_cfg.generations
+    return {
+        "ga_population": ga_cfg.population,
+        "ga_generations": gens,
+        "verify_off_wall_s": round(walls["verify_off"], 2),
+        "verify_on_wall_s": round(walls["verify_on"], 2),
+        "overhead_ms_per_generation": round(
+            (walls["verify_on"] - walls["verify_off"]) / gens * 1e3, 3),
+        "overhead_frac": round(
+            walls["verify_on"] / max(walls["verify_off"], 1e-12) - 1.0, 4),
+        "rejected": results["verify_on"].rejected,
+        "bit_identical_best_score": True,
+        "mask_population": len(big),
+        "mask_ms_per_sweep": round(t_mask * 1e3, 3),
+        "mask_encodings_per_sec": round(len(big) / t_mask),
     }
 
 
@@ -617,7 +687,8 @@ def bench_co_explore(ga_cfg):
 def run(out_path: str | None = None, population: int | None = None,
         generations: int | None = None, sweep: bool = False,
         warmup: int = 1, devices: str | None = None,
-        devices_only: bool = False, fused_pops: str | None = None):
+        devices_only: bool = False, fused_pops: str | None = None,
+        verify_only: bool = False):
     from repro.core import cache_stats
     from repro.core.ga import GAConfig
 
@@ -631,12 +702,15 @@ def run(out_path: str | None = None, population: int | None = None,
                           generations=generations)
     spec, hw, batches, graphs, tables = build_scenario()
 
-    if devices_only:
-        # recompute just the device axis (meant for a forced-8-device
-        # environment, where the single-device sections would crawl) and
-        # merge into the existing record
+    if devices_only or verify_only:
+        # recompute just the requested axis (device axis: meant for a
+        # forced-8-device environment, where the single-device sections
+        # would crawl) and merge into the existing record
         rec = {"benchmark": "search_throughput",
                "scenario": "llama3_2_3b prefill (ShareGPT)"}
+        if verify_only:
+            rec["verify_overhead"] = bench_verify_overhead(
+                graphs, tables, hw, ga_cfg, warmup=warmup)
     else:
         rec = {
             "benchmark": "search_throughput",
@@ -650,6 +724,8 @@ def run(out_path: str | None = None, population: int | None = None,
                 ga_cfg, n_gens=12 if not FULL else 50),
             "stream_slo": bench_stream_slo(ga_cfg),
             "cosearch": bench_cosearch(ga_cfg),
+            "verify_overhead": bench_verify_overhead(
+                graphs, tables, hw, ga_cfg, warmup=warmup),
         }
         # paper-scale population x backend sweep (ISSUE-8 axis); default
         # pops follow the issue, override with --fused-pops
@@ -707,6 +783,11 @@ if __name__ == "__main__":
     ap.add_argument("--fused-pops", default=None,
                     help="comma-separated populations for the fused-kernel "
                          "backend sweep (default 64,512,2048,4096)")
+    ap.add_argument("--verify-only", action="store_true",
+                    help="recompute only the verify_overhead record "
+                         "(GAConfig(verify=) legality pre-filter cost) and "
+                         "merge into --out")
     args = ap.parse_args()
     run(args.out, args.population, args.generations, args.sweep,
-        args.warmup, args.devices, args.devices_only, args.fused_pops)
+        args.warmup, args.devices, args.devices_only, args.fused_pops,
+        args.verify_only)

@@ -40,7 +40,7 @@ def run():
     with Timer() as t:
         for L in (128, 1024, 5120, 10240):
             row = [str(L)]
-            for name, dims in phases.items():
+            for _name, dims in phases.items():
                 m, k, n = dims(L)
                 # short sequences come with many micro-batches in serving
                 reuse = max(1, 2048 // max(L, 1))
@@ -50,7 +50,7 @@ def run():
             print(",".join(row))
         # decode row (GEMV with batch merging, deep reuse)
         row = ["decode(b128)"]
-        for name, dims in phases.items():
+        for _name, dims in phases.items():
             m, k, n = dims(128)
             ws = gemm_edp(128, k, n, "WS", spec, reuse_passes=8)
             os_ = gemm_edp(128, k, n, "OS", spec)

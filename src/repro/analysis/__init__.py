@@ -1,0 +1,38 @@
+"""Static analyzers for the mapping-search stack.
+
+Two prongs (see README "Static analysis"):
+
+* :mod:`repro.analysis.mapping` — the mapping-legality analyzer: the full
+  §IV encoding contract (segmentation well-formedness, chiplet ranges,
+  topological scheduled orders, the padded predecessor-position contract,
+  the decode/prefill request contract) checked statically, reported as
+  structured :class:`~repro.analysis.diagnostics.Diagnostic` records.
+  Wired as the ``GAConfig(verify=True)`` offspring pre-filter and the
+  ``REPRO_VERIFY_MAPPINGS=1`` evaluator debug gate; proven against the
+  numpy oracle by :mod:`repro.analysis.fuzz`.
+* ``tools/repro_lint.py`` — the repo-specific JAX-purity AST lint (rules
+  RL001..RL006); it lives outside the package so CI can run it without
+  importing jax, but shares the rule-id + severity conventions here.
+"""
+from .diagnostics import ERROR, WARNING, Diagnostic, format_diagnostics, is_legal
+from .mapping import (
+    VERIFY_ENV,
+    MappingLegalityError,
+    assert_legal,
+    assert_population_legal,
+    population_legal_mask,
+    verify_encoding,
+    verify_env_enabled,
+    verify_order,
+    verify_population,
+    verify_ppos,
+    verify_requests,
+)
+
+__all__ = [
+    "Diagnostic", "ERROR", "WARNING", "format_diagnostics", "is_legal",
+    "MappingLegalityError", "assert_legal", "assert_population_legal",
+    "population_legal_mask", "verify_encoding", "verify_order",
+    "verify_population", "verify_ppos", "verify_requests",
+    "VERIFY_ENV", "verify_env_enabled",
+]

@@ -226,7 +226,9 @@ class Scenario:
                 max_slots=self.max_slots, max_iters=self.max_stream_iters)
         return self._rollout
 
-    def batches(self, hw: HardwareConfig | None = None) -> list[list[Request]]:
+    # hw kept for call-site compatibility (hardware-dependent batching may
+    # return once micro_batch moves into the rollout)
+    def batches(self, hw: HardwareConfig | None = None) -> list[list[Request]]:  # noqa: ARG002
         return self.rollout().batches
 
     def micro_batch(self, hw: HardwareConfig, batch: list[Request]) -> int:

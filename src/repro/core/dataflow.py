@@ -230,7 +230,8 @@ def gemm_cost_batch(m, k, n, spec: ChipletSpec, dataflow: str) -> GemmCostBatch:
     )
 
 
-def vector_cost(flops: float, spec: ChipletSpec) -> GemmCost:
+def vector_cost(flops: float, spec: ChipletSpec) -> GemmCost:  # noqa: ARG001
+    # `spec` mirrors gemm_cost's signature so cost builders dispatch uniformly
     """Post-processing-unit-only op (reduction / normalisation / router)."""
     return GemmCost(
         compute_cycles=flops / VECTOR_LANES,

@@ -18,6 +18,7 @@ special cases below.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -44,11 +45,20 @@ class MappingEncoding:
         return self.layer_to_chip.shape[1]
 
     def validate(self, n_chiplets: int) -> bool:
-        return bool(
-            (self.layer_to_chip >= 0).all()
-            and (self.layer_to_chip < n_chiplets).all()
-            and np.isin(self.segmentation, (0, 1)).all()
-        )
+        """Deprecated bool form of the encoding contract check.
+
+        Use ``repro.analysis.verify_encoding`` (structured diagnostics —
+        rule ids, loci, severities) or ``repro.analysis.is_legal`` on its
+        result; the bool form made every caller swallow *why* an encoding
+        was illegal."""
+        warnings.warn(
+            "MappingEncoding.validate(n_chiplets) is deprecated; use "
+            "repro.analysis.verify_encoding(enc, n_chiplets) for "
+            "structured diagnostics (is_legal(...) for the bool verdict)",
+            DeprecationWarning, stacklevel=2)
+        from ..analysis.diagnostics import is_legal
+        from ..analysis.mapping import verify_encoding
+        return is_legal(verify_encoding(self, n_chiplets))
 
     def copy(self) -> "MappingEncoding":
         return MappingEncoding(self.segmentation.copy(), self.layer_to_chip.copy())

@@ -149,7 +149,7 @@ class CostTables:
                 # dataflow-neutral ops fall back to OS when scheduled on WS
                 use_os = neutral[gop] & (flow == "WS")
 
-                def sel(attr):
+                def sel(attr, use_os=use_os, flow=flow):
                     return np.where(use_os, getattr(batch["OS"], attr),
                                     getattr(batch[flow], attr))
 
@@ -295,11 +295,25 @@ def evaluate(
     hw: HardwareConfig,
     tables: CostTables | None = None,
     backend=None,
+    verify: bool | None = None,
 ) -> EvalResult:
     """Reference single-mapping evaluation. ``backend`` routes the timing
     recurrence (pass B) through any ``repro.core.timing.TimingBackend``
     (default: the numpy oracle) — the shared parity suite runs this very
-    function under all three backends."""
+    function under all three backends.
+
+    ``verify=True`` runs the static legality analyzer on ``enc`` first and
+    raises ``repro.analysis.MappingLegalityError`` on any violation —
+    without it, an illegal encoding prices silently wrong (numpy fancy
+    indexing wraps negative chiplet ids instead of failing). The default
+    ``None`` follows the ``REPRO_VERIFY_MAPPINGS`` debug gate."""
+    # function-level import: repro.analysis depends on core submodules, so
+    # a module-level import here would cycle through repro.core.__init__
+    from ..analysis.mapping import assert_legal, verify_env_enabled
+    if verify is None:
+        verify = verify_env_enabled()
+    if verify:
+        assert_legal(enc, hw.n_chiplets, graph=graph)
     if tables is None:
         tables = CostTables.build(graph, hw)
     flags = data_access_flags(graph, enc, hw)

@@ -14,6 +14,7 @@ engine because changing them re-fuses the graph).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
@@ -45,6 +46,15 @@ class GAConfig:
     mutation_rate: float = 0.9
     elite: int = 2
     seed: int = 0
+    # pre-filter offspring through the static legality analyzer
+    # (repro.analysis.population_legal_mask) before pricing: an illegal
+    # child is replaced by a copy of its first parent (already scored
+    # legal), consuming no rng draws — with zero rejections the search is
+    # bit-identical to verify=False. Off by default: the GA's own
+    # operators are closed over the legal space (property-tested in
+    # tests/test_analysis.py), so the filter is a guard for custom /
+    # warm-started operator stacks, priced in BENCH_search.json.
+    verify: bool = False
 
 
 @dataclass
@@ -57,6 +67,8 @@ class GAResult:
     # (compass fixed-point loop); None for the non-GA searchers below
     final_population: StackedPopulation | None = None
     final_scores: np.ndarray | None = None
+    # offspring replaced by the GAConfig(verify=True) legality pre-filter
+    rejected: int = 0
 
 
 @dataclass
@@ -70,6 +82,9 @@ class JointGAResult:
     evaluations: int = 0
     final_populations: "dict[tuple, StackedPopulation] | None" = None
     final_scores: np.ndarray | None = None
+    # joint offspring replaced by the legality pre-filter (an individual
+    # illegal in ANY group is rejected whole, keeping groups index-aligned)
+    rejected: int = 0
 
 
 # --- Table III mutation operators --------------------------------------------
@@ -345,13 +360,28 @@ def validate_warm_start(encodings, rows: int, m_cols: int,
     since they were ranked, so ``ga_search`` always re-scores the warm
     population against the current fitness (stale-elite contamination is
     tested in tests/test_ga.py)."""
+    from ..analysis.diagnostics import is_legal
+    from ..analysis.mapping import verify_encoding
+
     if isinstance(encodings, StackedPopulation):
         encodings = encodings.to_encodings()
     out = []
+    dropped_rules: set[str] = set()
     for enc in encodings:
-        if enc.layer_to_chip.shape == (rows, m_cols) \
-                and enc.validate(n_chips):
+        if enc.layer_to_chip.shape != (rows, m_cols):
+            continue  # other structure group — routine in co-search
+        diags = verify_encoding(enc, n_chips)
+        if is_legal(diags):
             out.append(enc.copy())
+        else:
+            dropped_rules.update(d.rule for d in diags)
+    if dropped_rules:
+        # a shape mismatch is expected across groups; an *illegal* warm
+        # encoding means something upstream bred out of contract — say so
+        # instead of silently shrinking the warm set
+        warnings.warn(
+            "validate_warm_start dropped illegal warm-start encodings "
+            f"(rules: {', '.join(sorted(dropped_rules))})", stacklevel=2)
     return out
 
 
@@ -393,6 +423,7 @@ def ga_search(
     pop = StackedPopulation.from_encodings(init)
     scores = score_population(eval_fn, pop)
     n_eval = len(pop)
+    n_rejected = 0
     history = [float(scores.min())]
 
     for gen in range(cfg.generations):
@@ -413,6 +444,17 @@ def ga_search(
         children = StackedPopulation(c_seg, c_l2c)
         mutate_population(rng, children, n_chips, progress,
                           rate=cfg.mutation_rate)
+        if cfg.verify:
+            # legality pre-filter: replace illegal offspring with their
+            # first parent (legal by induction) BEFORE pricing; no rng is
+            # consumed, so a zero-rejection run is bit-identical to
+            # verify=False
+            from ..analysis.mapping import population_legal_mask
+            bad = np.flatnonzero(~population_legal_mask(children, n_chips))
+            if bad.size:
+                children.segmentation[bad] = pop.segmentation[p1[bad]]
+                children.layer_to_chip[bad] = pop.layer_to_chip[p1[bad]]
+                n_rejected += int(bad.size)
 
         pop = StackedPopulation(
             np.concatenate([elite_seg, children.segmentation]),
@@ -426,7 +468,8 @@ def ga_search(
                     best_score=float(scores[best_i]),
                     history=history, evaluations=n_eval,
                     final_population=pop,
-                    final_scores=np.asarray(scores, dtype=float))
+                    final_scores=np.asarray(scores, dtype=float),
+                    rejected=n_rejected)
 
 
 def _group_bias_probs(mutation_bias, n_groups: int,
@@ -515,6 +558,7 @@ def joint_ga_search(
         pops[k] = StackedPopulation.from_encodings(init)
     scores = np.asarray(eval_fn(pops), dtype=float)
     n_eval = cfg.population
+    n_rejected = 0
     history = [float(scores.min())]
 
     for gen in range(cfg.generations):
@@ -553,6 +597,22 @@ def joint_ga_search(
             for gi, k in enumerate(keys):
                 mutate_population(rng, children[k], n_chips, progress,
                                   mask=do & (grp == gi))
+        if cfg.verify:
+            # a joint individual illegal in ANY group is replaced whole
+            # (every group's slot reverts to parent p1), preserving the
+            # cross-group index alignment of the genotype
+            from ..analysis.mapping import population_legal_mask
+            legal = np.ones(n_child, dtype=bool)
+            for k in keys:
+                legal &= population_legal_mask(children[k], n_chips)
+            bad = np.flatnonzero(~legal)
+            if bad.size:
+                for k in keys:
+                    children[k].segmentation[bad] = \
+                        pops[k].segmentation[p1[bad]]
+                    children[k].layer_to_chip[bad] = \
+                        pops[k].layer_to_chip[p1[bad]]
+                n_rejected += int(bad.size)
 
         pops = {
             k: StackedPopulation(
@@ -570,7 +630,8 @@ def joint_ga_search(
         best_score=float(scores[best_i]),
         history=history, evaluations=n_eval,
         final_populations=pops,
-        final_scores=np.asarray(scores, dtype=float))
+        final_scores=np.asarray(scores, dtype=float),
+        rejected=n_rejected)
 
 
 def simulated_annealing_search(

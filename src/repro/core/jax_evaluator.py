@@ -557,8 +557,11 @@ _DEVICE_CACHE_LOCK = threading.Lock()
 
 def _stacked_device_tables(tables: "tuple[CostTables, ...]",
                            mesh: "Mesh | None" = None) -> dict:
+    # identity keys are safe HERE: the cache value stores the `tables`
+    # tuple itself, so every keyed object stays alive (its id cannot
+    # recycle) for exactly as long as its cache entry exists
     key = (None if mesh is None else _mesh_key(mesh),
-           tuple(id(t) for t in tables))
+           tuple(id(t) for t in tables))  # repro-lint: disable=RL005
     with _DEVICE_CACHE_LOCK:
         hit = _DEVICE_TABLE_CACHE.get(key)
         if hit is not None:
@@ -658,6 +661,14 @@ class PopulationEvaluator:
     def _run(self, population, full: bool = False):
         record_backend_dispatch(self._backend)
         pop = as_stacked(population)
+        # function-level import: repro.analysis depends on core submodules
+        from ..analysis.mapping import assert_population_legal, \
+            verify_env_enabled
+        if verify_env_enabled():
+            # host-side legality gate (REPRO_VERIFY_MAPPINGS=1): raise on
+            # illegal encodings instead of letting the jitted gathers
+            # clamp/wrap them into silently-wrong prices
+            assert_population_legal(pop, self._n_chips, graph=self.graph)
         orders = self._order_cache.orders(pop.segmentation)
         if self._mesh is None:
             return _population_pass(
@@ -746,6 +757,14 @@ class GroupPopulationEvaluator:
     def _run(self, population, full: bool = False):
         record_backend_dispatch(self._backend)
         pop = as_stacked(population)
+        from ..analysis.mapping import assert_population_legal, \
+            verify_env_enabled
+        if verify_env_enabled():
+            # host-side legality gate — every batch of the group shares
+            # one dependency structure (asserted in __post_init__), so
+            # checking against graphs[0] covers them all
+            assert_population_legal(pop, self._n_chips,
+                                    graph=self.graphs[0])
         orders = self._order_cache.orders(pop.segmentation)
         if self._mesh is None:
             return _grouped_population_pass(

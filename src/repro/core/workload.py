@@ -230,11 +230,6 @@ class ExecutionGraph:
 # --------------------------------------------------------------------------
 
 
-def _attn_cols(spec: LLMSpec, cross: bool = False) -> list[str]:
-    base = ["q_cross", "attn_cross", "proj_cross"] if cross else ["qkv", "attn", "proj"]
-    return base
-
-
 def representative_blocks(spec: LLMSpec, max_blocks: int = 8) -> int:
     """Smallest window of consecutive blocks covering the layer pattern."""
     period = 1
@@ -471,7 +466,7 @@ def build_execution_graph(
 
         first_g = len(layers)
         for g in range(groups):
-            def mk_group(reqs, moe=moe, epg=epg, groups=groups, mult=mult):
+            def mk_group(reqs, moe=moe, epg=epg, mult=mult):
                 sq = sum_q(reqs)
                 # routed tokens spread across the group's experts
                 m_e = max(1, _ceil_div(sq * moe.top_k, moe.n_routed))

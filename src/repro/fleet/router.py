@@ -123,7 +123,7 @@ def assign(requests: Sequence[StreamRequest], n_replicas: int,
             owners = {c: [rank % n_replicas]
                       for rank, c in enumerate(classes)}
         seen: dict[int, int] = {}
-        for i, r in enumerate(requests):
+        for i, _r in enumerate(requests):
             c = int(cls[i])
             k = seen.get(c, 0)
             own = owners[c]

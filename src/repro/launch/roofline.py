@@ -143,7 +143,7 @@ def _coll_bytes(rec: dict) -> float:
     if not hist:
         return sum(rec["collective_bytes_per_device"].values()) * trips
     total = 0.0
-    for kind, nbytes, count in hist:
+    for _kind, nbytes, count in hist:
         step_level = rec["kind"] == "train" and nbytes > 1e8
         total += nbytes * count * (1.0 if step_level else trips)
     return total

@@ -45,7 +45,7 @@ def unstack_blocks(slots: list, period: int) -> list:
     blocks = []
     for k in range(steps):
         for j in range(period):
-            blocks.append(jax.tree.map(lambda x: x[k], slots[j]))
+            blocks.append(jax.tree.map(lambda x, k=k: x[k], slots[j]))
     return blocks
 
 

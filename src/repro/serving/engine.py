@@ -65,7 +65,7 @@ class RunResult:
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, max_batch: int = 8,
                  max_len: int = 512, impl: str = "xla", enc_out=None,
-                 cache_dtype=jnp.float32, greedy: bool = True):
+                 cache_dtype=jnp.float32):
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
@@ -93,7 +93,7 @@ class ServingEngine:
         scalars."""
         row = jax.tree.map(
             lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, 0), cache)
-        logits, row = extend(self.params, self.cfg, tokens[None, :], row,
+        logits, row = extend(params, self.cfg, tokens[None, :], row,
                              enc_out=None if self.enc_out is None
                              else self.enc_out[:1], impl=self.impl,
                              length=length)

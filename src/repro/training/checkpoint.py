@@ -119,7 +119,7 @@ def restore(ckpt_dir: str, step: int, like: Any,
     leaves = []
     flat_shard = (jax.tree.leaves(shardings) if shardings is not None
                   else [None] * len(paths))
-    for (path_k, leaf), sh in zip(paths, flat_shard):
+    for (path_k, _leaf), sh in zip(paths, flat_shard):
         key = "/".join(_key_str(k) for k in path_k)
         arr = data[key]
         if sh is not None:

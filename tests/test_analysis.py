@@ -1,0 +1,304 @@
+"""Static mapping-legality analyzer (repro.analysis): property fuzz over
+the GA operator closure, hand-built illegal encodings hitting their
+intended rule ids, the GAConfig(verify=True) pre-filter's bit-identity
+contract, and the REPRO_VERIFY_MAPPINGS evaluator gates."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import (
+    MappingLegalityError,
+    is_legal,
+    population_legal_mask,
+    verify_encoding,
+    verify_order,
+    verify_population,
+    verify_ppos,
+    verify_requests,
+)
+from repro.analysis.fuzz import run_fuzz
+from repro.core.encoding import (
+    MappingEncoding,
+    StackedPopulation,
+    random_encoding,
+)
+from repro.core.evaluator import CostTables, evaluate
+from repro.core.ga import (
+    GAConfig,
+    crossover_population,
+    ga_search,
+    mutate_population,
+)
+from repro.core.hardware import make_hardware
+from repro.core.jax_evaluator import PopulationEvaluator
+from repro.core.workload import (
+    DECODE,
+    LLMSpec,
+    Request,
+    build_execution_graph,
+    decode_request,
+    prefill_request,
+)
+
+SPEC = LLMSpec("t", 256, 4, 4, 64, 1024, 1000, 8)
+HW = make_hardware(256, "M", tensor_parallel=2)  # 8 chiplets
+CHIPS = HW.n_chiplets
+
+
+def _graph():
+    # micro_batch_size=1 -> 2 rows: row 0 the prefill, row 1 the decode
+    batch = [prefill_request(64), decode_request(128)]
+    return build_execution_graph(SPEC, batch, 1, tp=2, n_blocks=1)
+
+
+def _rules(diags):
+    return {d.rule for d in diags}
+
+
+# --- property fuzz: the GA operator stack is closed over the legal space ---
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=st.integers(1, 5), cols=st.integers(1, 10),
+       chips=st.integers(1, 8), seed=st.integers(0, 10_000))
+def test_random_encoding_always_legal(rows, cols, chips, seed):
+    rng = np.random.default_rng(seed)
+    enc = random_encoding(rng, rows, cols, chips)
+    assert verify_encoding(enc, chips) == []
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), progress=st.floats(0, 1))
+def test_bred_population_always_legal(seed, progress):
+    """crossover_population + mutate_population output stays inside the
+    contract — the closure property the verify pre-filter banks on."""
+    rng = np.random.default_rng(seed)
+    rows, cols, p = 3, 8, 12
+    a = StackedPopulation.from_encodings(
+        [random_encoding(rng, rows, cols, CHIPS) for _ in range(p)])
+    b = StackedPopulation.from_encodings(
+        [random_encoding(rng, rows, cols, CHIPS) for _ in range(p)])
+    seg, l2c = crossover_population(rng, a.segmentation, a.layer_to_chip,
+                                    b.segmentation, b.layer_to_chip)
+    children = StackedPopulation(seg, l2c)
+    mutate_population(rng, children, CHIPS, float(progress), rate=1.0)
+    assert population_legal_mask(children, CHIPS).all()
+    assert verify_population(children, CHIPS) == []
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_mask_and_diagnostic_paths_agree(seed):
+    rng = np.random.default_rng(seed)
+    rows, cols = 2, 6
+    pop = StackedPopulation.from_encodings(
+        [random_encoding(rng, rows, cols, CHIPS) for _ in range(8)])
+    # corrupt half the individuals in assorted ways
+    pop.layer_to_chip[1, 0, 0] = -3
+    pop.layer_to_chip[3, 1, 2] = CHIPS + 7
+    pop.segmentation[5, 1] = 2
+    mask = population_legal_mask(pop, CHIPS)
+    diags = verify_population(pop, CHIPS)
+    bad_individuals = {d.individual for d in diags}
+    assert bad_individuals == set(np.flatnonzero(~mask).tolist())
+    assert not mask[1] and not mask[3] and not mask[5]
+
+
+# --- hand-built illegal encodings hit their intended rule ids --------------
+
+
+def test_out_of_range_chiplet_is_map003():
+    enc = MappingEncoding(np.zeros(3, np.uint8),
+                          np.zeros((2, 4), np.int32))
+    enc.layer_to_chip[1, 2] = CHIPS          # one past the end
+    diags = verify_encoding(enc, CHIPS)
+    assert _rules(diags) == {"MAP003"}
+    d = next(d for d in diags if d.rule == "MAP003")
+    assert (d.row, d.col) == (1, 2)
+
+
+def test_negative_chiplet_is_map003():
+    # numpy fancy indexing would wrap -1 silently — the analyzer must not
+    enc = MappingEncoding(np.zeros(3, np.uint8), np.zeros((2, 4), np.int32))
+    enc.layer_to_chip[0, 0] = -1
+    assert _rules(verify_encoding(enc, CHIPS)) == {"MAP003"}
+
+
+def test_non_binary_segmentation_is_map002():
+    enc = MappingEncoding(np.zeros(3, np.uint8), np.zeros((2, 4), np.int32))
+    enc.segmentation[1] = 2
+    assert _rules(verify_encoding(enc, CHIPS)) == {"MAP002"}
+
+
+def test_population_segmentation_shape_is_map001():
+    pop = StackedPopulation(np.zeros((3, 5), np.uint8),
+                            np.zeros((3, 2, 4), np.int32))  # M-1 should be 3
+    diags = verify_population(pop, CHIPS)
+    assert _rules(diags) == {"MAP001"}
+    assert not population_legal_mask(pop, CHIPS).any()
+
+
+def test_encoding_vs_graph_shape_is_map001():
+    g = _graph()
+    enc = MappingEncoding(np.zeros(3, np.uint8), np.zeros((1, 4), np.int32))
+    assert _rules(verify_encoding(enc, CHIPS, graph=g)) == {"MAP001"}
+
+
+def test_duplicate_op_in_order_is_map004():
+    order = np.array([(0, 0), (0, 1), (0, 1), (0, 3)], np.int32)
+    diags = verify_order(order, rows=1, m_cols=4)
+    assert _rules(diags) == {"MAP004"}
+
+
+def test_out_of_graph_op_in_order_is_map004():
+    order = np.array([(0, 0), (0, 1), (1, 2), (0, 3)], np.int32)
+    assert _rules(verify_order(order, rows=1, m_cols=4)) == {"MAP004"}
+
+
+def test_cyclic_order_is_map005():
+    """An op scheduled before its predecessor — the 'cyclic order' case:
+    col 2 depends on col 1 but runs first."""
+    order = np.array([(0, 0), (0, 2), (0, 1), (0, 3)], np.int32)
+    pred_lo = np.array([-1, 0, 1, 2])
+    pred_hi = np.array([-1, 1, 2, 3])
+    diags = verify_order(order, rows=1, m_cols=4,
+                         pred_lo=pred_lo, pred_hi=pred_hi)
+    assert "MAP005" in _rules(diags)
+    d = next(d for d in diags if d.rule == "MAP005")
+    assert (d.row, d.col) == (0, 2)
+    # a legal order of the same graph is clean
+    good = np.array([(0, 0), (0, 1), (0, 2), (0, 3)], np.int32)
+    assert verify_order(good, rows=1, m_cols=4,
+                        pred_lo=pred_lo, pred_hi=pred_hi) == []
+
+
+def test_corrupt_ppos_is_map006():
+    # step 1 pointing at itself, and a pointer past the sentinel
+    ppos = np.array([[4], [1], [0], [7]], np.int32)
+    rules = [d.rule for d in verify_ppos(ppos, t_len=4)]
+    assert rules == ["MAP006", "MAP006"]
+    # clean ppos: sentinel + strict back-pointers
+    assert verify_ppos(np.array([[4], [0], [1], [4]], np.int32), 4) == []
+
+
+def test_decode_contract_is_map007():
+    g = _graph()
+    # Request.__post_init__ allows this shape, but the serving contract
+    # does not: a decode step must process exactly 1 token
+    g.requests_per_row[1][-1] = Request(DECODE, 3, 128)
+    diags = verify_requests(g)
+    assert _rules(diags) == {"MAP007"}
+    enc = random_encoding(np.random.default_rng(0), g.rows, g.n_cols, CHIPS)
+    assert "MAP007" in _rules(verify_encoding(enc, CHIPS, graph=g))
+
+
+def test_graph_checked_encoding_runs_dependency_rules():
+    g = _graph()
+    enc = random_encoding(np.random.default_rng(3), g.rows, g.n_cols, CHIPS)
+    assert verify_encoding(enc, CHIPS, graph=g) == []
+
+
+# --- deprecated bool form --------------------------------------------------
+
+
+def test_validate_is_deprecated_but_agrees():
+    enc = random_encoding(np.random.default_rng(1), 2, 5, CHIPS)
+    with pytest.warns(DeprecationWarning):
+        assert enc.validate(CHIPS) is True
+    enc.layer_to_chip[0, 0] = -2
+    with pytest.warns(DeprecationWarning):
+        assert enc.validate(CHIPS) is False
+
+
+# --- GA pre-filter ---------------------------------------------------------
+
+
+def _ga_eval(g):
+    tables = CostTables.build(g, HW)
+
+    def eval_fn(encs):
+        return np.array([evaluate(g, e, HW, tables=tables).latency_s
+                         for e in encs])
+    return eval_fn
+
+
+def test_verify_prefilter_is_bit_identical_when_nothing_rejected():
+    g = _graph()
+    fn = _ga_eval(g)
+    cfg = dict(population=10, generations=4, seed=5)
+    off = ga_search(fn, g.rows, g.n_cols, CHIPS, GAConfig(**cfg))
+    on = ga_search(fn, g.rows, g.n_cols, CHIPS,
+                   GAConfig(**cfg, verify=True))
+    # the GA operators are closed over the legal space (properties above),
+    # so the filter rejects nothing and consumes no rng: bitwise equality
+    assert on.rejected == 0
+    assert on.best_score == off.best_score
+    assert on.history == off.history
+    np.testing.assert_array_equal(on.best.segmentation,
+                                  off.best.segmentation)
+    np.testing.assert_array_equal(on.best.layer_to_chip,
+                                  off.best.layer_to_chip)
+
+
+def test_warm_start_drop_warns_with_rule_ids():
+    from repro.core.ga import validate_warm_start
+
+    bad = [MappingEncoding(np.zeros(4, np.uint8),
+                           np.full((2, 5), 10_000, np.int32))]
+    with pytest.warns(UserWarning, match="MAP003"):
+        assert validate_warm_start(bad, 2, 5, CHIPS) == []
+
+
+# --- evaluator gates -------------------------------------------------------
+
+
+def _bad_encoding(g):
+    enc = random_encoding(np.random.default_rng(2), g.rows, g.n_cols, CHIPS)
+    enc.layer_to_chip[0, 0] = -1
+    return enc
+
+
+def test_evaluate_verify_gate_raises_on_illegal():
+    g = _graph()
+    enc = _bad_encoding(g)
+    with pytest.raises(MappingLegalityError) as exc:
+        evaluate(g, enc, HW, verify=True)
+    assert any(d.rule == "MAP003" for d in exc.value.diagnostics)
+    # without the gate the same encoding prices *silently* (negative ids
+    # wrap in numpy fancy indexing) — the hazard the gate exists for
+    res = evaluate(g, enc, HW, verify=False)
+    assert np.isfinite(res.latency_s)
+
+
+def test_evaluate_honours_env_gate(monkeypatch):
+    g = _graph()
+    enc = _bad_encoding(g)
+    monkeypatch.setenv("REPRO_VERIFY_MAPPINGS", "1")
+    with pytest.raises(MappingLegalityError):
+        evaluate(g, enc, HW)
+    monkeypatch.setenv("REPRO_VERIFY_MAPPINGS", "0")
+    evaluate(g, enc, HW)  # gate off: prices (silently wrong, documented)
+
+
+def test_population_evaluator_env_gate(monkeypatch):
+    g = _graph()
+    ev = PopulationEvaluator(g, CostTables.build(g, HW), HW)
+    pop = StackedPopulation.from_encodings(
+        [random_encoding(np.random.default_rng(4), g.rows, g.n_cols, CHIPS),
+         _bad_encoding(g)])
+    monkeypatch.setenv("REPRO_VERIFY_MAPPINGS", "1")
+    with pytest.raises(MappingLegalityError) as exc:
+        ev.evaluate_population(pop)
+    assert any(d.individual == 1 for d in exc.value.diagnostics)
+    monkeypatch.delenv("REPRO_VERIFY_MAPPINGS")
+    lat, _ = ev.evaluate_population(pop)   # ungated: jnp clamps silently
+    assert np.isfinite(lat).all()
+
+
+# --- oracle-agreement smoke (the 10k sweep runs in the lint-static job) ----
+
+
+def test_fuzz_contract_smoke():
+    rep = run_fuzz(n=120, seed=7, p_corrupt=0.5)
+    assert rep.ok, vars(rep)
+    assert rep.accepted and rep.rejected

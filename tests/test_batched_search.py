@@ -3,6 +3,7 @@ per-individual references (this PR's tentpole)."""
 import numpy as np
 import pytest
 
+from repro.analysis import is_legal, verify_encoding
 from repro.core import compass
 from repro.core.encoding import (
     MappingEncoding,
@@ -226,7 +227,7 @@ def test_crossover_population_structure_and_validity():
     assert l2c.shape == a.layer_to_chip.shape
     for i in range(p):
         child = MappingEncoding(seg[i], l2c[i])
-        assert child.validate(n_chips)
+        assert is_legal(verify_encoding(child, n_chips))
         # each segmentation bit comes from one parent
         assert np.all((seg[i] == a.segmentation[i])
                       | (seg[i] == b.segmentation[i]))
@@ -262,7 +263,7 @@ def test_mutate_population_validity_and_determinism(progress):
     mutate_population(np.random.default_rng(11), pop, HW.n_chiplets,
                       progress, rate=0.9)
     for enc in pop.to_encodings():
-        assert enc.validate(HW.n_chiplets)
+        assert is_legal(verify_encoding(enc, HW.n_chiplets))
 
     pop2 = StackedPopulation(ref_seg.copy(), ref_l2c.copy())
     mutate_population(np.random.default_rng(11), pop2, HW.n_chiplets,
@@ -326,4 +327,4 @@ def test_ga_search_stacked_eval_path():
                     GAConfig(population=12, generations=4, seed=0))
     assert calls["stacked"] == 5            # init + one per generation
     assert res.best_score <= res.history[0]
-    assert res.best.validate(HW.n_chiplets)
+    assert is_legal(verify_encoding(res.best, HW.n_chiplets))

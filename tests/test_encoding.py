@@ -12,6 +12,7 @@ from repro.core.encoding import (
     pipeline_parallel,
     random_encoding,
 )
+from repro.analysis import is_legal, verify_encoding
 from repro.core.ga import _L2C_OPS, _seg_mutate, crossover
 
 
@@ -66,7 +67,7 @@ def test_algorithm1_pipeline_parallel():
 def test_random_encoding_valid_and_order_is_permutation(rows, cols, chips, seed):
     rng = np.random.default_rng(seed)
     enc = random_encoding(rng, rows, cols, chips)
-    assert enc.validate(chips)
+    assert is_legal(verify_encoding(enc, chips))
     order = enc.scheduled_order()
     assert len(order) == rows * cols
     assert len({tuple(x) for x in order}) == rows * cols
@@ -93,7 +94,7 @@ def test_each_l2c_operator_preserves_invariants(rows, cols, chips, seed, op):
     enc = random_encoding(rng, rows, cols, chips)
     seg_before = enc.segmentation.copy()
     _L2C_OPS[op](rng, enc, chips)
-    assert enc.validate(chips)
+    assert is_legal(verify_encoding(enc, chips))
     assert enc.layer_to_chip.shape == (rows, cols)
     # layer_to_chip operators must never touch the segmentation bits
     assert np.array_equal(enc.segmentation, seg_before)
@@ -108,7 +109,7 @@ def test_seg_mutation_preserves_invariants(rows, cols, chips, seed):
     enc = random_encoding(rng, rows, cols, chips)
     l2c_before = enc.layer_to_chip.copy()
     _seg_mutate(rng, enc)
-    assert enc.validate(chips)
+    assert is_legal(verify_encoding(enc, chips))
     assert enc.segmentation.shape == (max(cols - 1, 0),)
     assert np.isin(enc.segmentation, (0, 1)).all()
     # segmentation mutation must never touch layer_to_chip
@@ -124,7 +125,7 @@ def test_crossover_child_slices_come_from_parents(rows, cols, chips, seed):
     a = random_encoding(rng, rows, cols, chips)
     b = random_encoding(rng, rows, cols, chips)
     child = crossover(rng, a, b)
-    assert child.validate(chips)
+    assert is_legal(verify_encoding(child, chips))
     _assert_segments_partition(child)
     # each segmentation bit comes from a parent
     for i, bit in enumerate(child.segmentation):

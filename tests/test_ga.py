@@ -1,8 +1,10 @@
 """GA mapping engine: operator validity + convergence + warm-start
 re-seeding (the cross-group co-search elite carrier)."""
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.analysis import is_legal, verify_encoding
 from repro.core.encoding import MappingEncoding, as_stacked, random_encoding
 from repro.core.evaluator import CostTables, evaluate
 from repro.core.ga import (
@@ -29,7 +31,7 @@ def test_mutation_preserves_validity(seed, progress):
     enc = random_encoding(rng, 4, 10, HW.n_chiplets)
     for _ in range(5):
         mutate(rng, enc, HW.n_chiplets, progress)
-    assert enc.validate(HW.n_chiplets)
+    assert is_legal(verify_encoding(enc, HW.n_chiplets))
 
 
 @settings(max_examples=30, deadline=None)
@@ -39,7 +41,7 @@ def test_crossover_preserves_validity(seed):
     a = random_encoding(rng, 4, 10, HW.n_chiplets)
     b = random_encoding(rng, 4, 10, HW.n_chiplets)
     child = crossover(rng, a, b)
-    assert child.validate(HW.n_chiplets)
+    assert is_legal(verify_encoding(child, HW.n_chiplets))
     assert child.layer_to_chip.shape == a.layer_to_chip.shape
 
 
@@ -140,7 +142,8 @@ def test_validate_warm_start_drops_invalid_encodings():
     wrong_shape = random_encoding(rng, 3, 6, 4)
     out_of_bounds = random_encoding(rng, 2, 6, 4)
     out_of_bounds.layer_to_chip[0, 0] = 99
-    kept = validate_warm_start([good, wrong_shape, out_of_bounds], 2, 6, 4)
+    with pytest.warns(UserWarning, match="MAP003"):
+        kept = validate_warm_start([good, wrong_shape, out_of_bounds], 2, 6, 4)
     assert len(kept) == 1
     assert np.array_equal(kept[0].layer_to_chip, good.layer_to_chip)
     # survivors are copies: mutating them cannot alias the carrier
@@ -153,10 +156,11 @@ def test_ga_search_with_all_invalid_warm_start_still_runs():
     fn, g = _eval_fn()
     bad = [MappingEncoding(np.zeros(g.n_cols - 1, np.uint8),
                            np.full((g.rows, g.n_cols), 10_000, np.int32))]
-    res = ga_search(fn, g.rows, g.n_cols, HW.n_chiplets,
-                    GAConfig(population=8, generations=2, seed=0),
-                    warm_start=bad)
-    assert res.best.validate(HW.n_chiplets)
+    with pytest.warns(UserWarning, match="MAP003"):
+        res = ga_search(fn, g.rows, g.n_cols, HW.n_chiplets,
+                        GAConfig(population=8, generations=2, seed=0),
+                        warm_start=bad)
+    assert is_legal(verify_encoding(res.best, HW.n_chiplets))
 
 
 def test_warm_start_none_is_bit_identical_to_cold_start():
